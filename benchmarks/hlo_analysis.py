@@ -1,0 +1,7 @@
+"""Re-export: the trip-count-aware HLO analyzer lives in repro.launch."""
+
+from repro.launch.hlo_analysis import (  # noqa: F401
+    Costs,
+    analyze,
+    split_computations,
+)

@@ -1,0 +1,87 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run artifacts. Usage:
+
+    PYTHONPATH=src python -m benchmarks.report [--tag hillclimb1]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.roofline import DRYRUN_DIR, load_records, terms
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def dryrun_table(mesh: str, tag: str = "") -> str:
+    recs = load_records(mesh, tag)
+    lines = [
+        "| arch | shape | strategy (attn/moe) | mb | fsdp | peak HBM/dev |"
+        " HLO flops/dev | coll bytes/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        pc = r["parallel_config"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {pc['attn_strategy']}/"
+            f"{pc['moe_strategy']} | {pc['microbatches']} | {pc['fsdp']} | "
+            f"{fmt_bytes(r.get('peak_memory_in_bytes'))} | "
+            f"{r['flops_per_device']:.3e} | {r['collective_bytes']:.3e} | "
+            f"{r['compile_s']:.0f} |")
+    # skipped cells
+    suffix = f"-{tag}" if tag else ""
+    for path in sorted(DRYRUN_DIR.glob(f"*--{mesh}{suffix}.json")):
+        if tag == "" and path.stem.count("--") != 2:
+            continue
+        rec = json.loads(path.read_text())
+        if rec["status"] == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | SKIPPED "
+                         f"(full attention @500k, see DESIGN.md) | | | | | | |")
+    return "\n".join(lines)
+
+
+def roofline_table(tag: str = "") -> str:
+    recs = load_records("single", tag)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        t = terms(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"**{t['dominant']}** | {t['useful_ratio']:.3f} | "
+            f"{t['roofline_frac']:.4f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("### Single-pod (16x16, 256 chips)\n")
+        print(dryrun_table("single", args.tag))
+        print("\n### Multi-pod (2x16x16, 512 chips)\n")
+        print(dryrun_table("multi", args.tag))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline (single-pod)\n")
+        print(roofline_table(args.tag))
+
+
+if __name__ == "__main__":
+    main()

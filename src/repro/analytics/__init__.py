@@ -1,0 +1,24 @@
+"""Serverless data-analytics case study (the paper's §3/§6 workload)."""
+
+from repro.analytics.table import (  # noqa: F401
+    DistTable,
+    Table,
+    distribute,
+    synth_table,
+)
+from repro.analytics.decisions import (  # noqa: F401
+    join_decision_node,
+    scheduling_decision_node,
+)
+from repro.analytics.simulator import (  # noqa: F401
+    ClusterSim,
+    SimTask,
+    calibrated_rates,
+    make_cluster,
+)
+from repro.analytics.query import (  # noqa: F401
+    QueryStrategy,
+    execute_query_jax,
+    plan_query_tasks,
+    reference_query_numpy,
+)

@@ -1,0 +1,202 @@
+"""TPC-DS-like sub-query (paper §6): two MapReduce phases + a Join phase.
+
+    Q: SELECT d.cat, SUM(f.v0 * f.v1)
+       FROM fact f JOIN dim d ON f.key = d.key
+       WHERE f.v0 > 0
+       GROUP BY d.cat
+
+Execution under Proteus: every phase is a decision node; the decision tuple
+(func, scale, schedule) is turned into SimTasks for the cluster simulator,
+with task durations taken from calibrated real-operator rates and shuffle
+volumes from the actual table sizes. The ``dynamic`` strategy additionally
+runs the paper's packing consolidation when the whole input fits one node.
+
+``execute_query_jax`` runs the same logical plan for real on the in-process
+JAX data plane (used by correctness tests against a numpy oracle).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analytics import operators as ops
+from repro.analytics.decisions import ALPHA, join_decision_node
+from repro.analytics.simulator import ClusterSim, SimTask, calibrated_rates
+from repro.analytics.table import DistTable, Table
+from repro.core.controllers import GlobalController, PrivateController
+from repro.core.decisions import Decision, DecisionContext, Schedule
+
+ROW_BYTES = 8  # key(4) + packed values, matching calibration units
+
+
+@dataclass
+class QueryStrategy:
+    """S-M = static merge, S-H = static hash, DYN = decision workflow.
+
+    "dynamic" is the refined cost-model decision node (paper Fig. 5 step 4);
+    "dynamic_fig6" is the literal T1/T2 threshold node of Fig. 6.
+    """
+
+    name: str   # static_merge | static_hash | dynamic | dynamic_fig6
+
+    def join_method(self, ctx: DecisionContext) -> Decision:
+        if self.name == "dynamic":
+            from repro.analytics.decisions import cost_model_join_node
+            return cost_model_join_node().decide(ctx)
+        if self.name == "dynamic_fig6":
+            return join_decision_node().decide(ctx)
+        func = "merge_join" if self.name == "static_merge" else "hash_join"
+        dist_a, dist_b = ctx.data_dist["A"], ctx.data_dist["B"]
+        nodes = tuple(sorted(dist_a.loc | dist_b.loc))
+        scale = max(1, int((dist_a.size + dist_b.size) / ALPHA))
+        return Decision(func, scale, Schedule("round-robin", nodes))
+
+
+def plan_query_tasks(sim: ClusterSim, pc: PrivateController,
+                     fact: DistTable, dim: DistTable,
+                     strategy: QueryStrategy, app: str = "query",
+                     consolidate_threshold: int = 2 << 30) -> None:
+    """Emit the task DAG for the sub-query under a strategy."""
+    rates = calibrated_rates()
+    gc = pc.gc
+    status = gc.node_status()
+    nodes = sorted(status.total_slots)
+    slots = max(status.total_slots.values())
+
+    dist_f, dist_d = fact.data_dist(), dim.data_dist()
+    pc.observe_data(dist_f)
+    pc.observe_data(dist_d)
+    ctx = DecisionContext(
+        data_dist={"A": dist_f, "B": dist_d},
+        node_status=status)
+
+    decision = strategy.join_method(ctx)
+    total_bytes = dist_f.size + dist_d.size
+    consolidated = bool(decision.extra("consolidate", False)) or (
+        strategy.name == "dynamic_fig6"
+        and total_bytes <= consolidate_threshold)
+
+    # ---- Phase 1: map over fact partitions (scan+filter+project) ----------
+    map1 = []
+    if consolidated:
+        # paper Fig. 7 (2 GB case): pack everything onto one node; the only
+        # transfers are the initial partition pulls.
+        target = max(dist_f.bytes_per_node, key=dist_f.bytes_per_node.get)
+        n_tasks = min(slots, max(1, int(dist_f.size / ALPHA)))
+        per = dist_f.size / n_tasks
+        for i in range(n_tasks):
+            src = nodes[i % len(nodes)]
+            sim.submit(SimTask(
+                f"{app}/map1/{i}", app, per / rates["scan"], node=target,
+                priority=10,
+                transfers={src: int(per)} if src != target else {}))
+            map1.append(f"{app}/map1/{i}")
+    else:
+        n_tasks = max(1, int(dist_f.size / ALPHA))
+        placement = Schedule("round-robin", tuple(nodes)).place(n_tasks)
+        per = dist_f.size / n_tasks
+        for i, node in enumerate(placement):
+            data_node = nodes[i % len(nodes)]
+            sim.submit(SimTask(
+                f"{app}/map1/{i}", app, per / rates["scan"], node=node,
+                priority=10,
+                transfers={data_node: int(per)} if data_node != node else {}))
+            map1.append(f"{app}/map1/{i}")
+
+    # ---- Phase 2: map over dim partitions ---------------------------------
+    map2 = []
+    n_tasks2 = max(1, int(dist_d.size / ALPHA))
+    place2 = Schedule("round-robin", tuple(sorted(dist_d.loc))).place(n_tasks2)
+    per2 = dist_d.size / n_tasks2
+    for i, node in enumerate(place2):
+        sim.submit(SimTask(f"{app}/map2/{i}", app, per2 / rates["scan"],
+                           node=node, priority=10))
+        map2.append(f"{app}/map2/{i}")
+
+    # ---- Join phase: the Fig. 6 decision node ------------------------------
+    join_nodes = decision.schedule.place(decision.scale) or tuple(nodes)
+    n_join = len(join_nodes)
+    per_join = dist_f.size / n_join
+
+    if consolidated:
+        target = max(dist_f.bytes_per_node, key=dist_f.bytes_per_node.get)
+        for i in range(min(slots, n_join)):
+            sim.submit(SimTask(
+                f"{app}/join/{i}", app,
+                per_join / rates["hash_probe"]
+                + dist_d.size / max(1, n_join) / rates["hash_build"],
+                node=target, priority=10, deps=tuple(map1 + map2)))
+    elif decision.func == "merge_join":
+        # shuffle both sides by key: every join task pulls its hash range
+        # from every map task's node (all-to-all), then sort-merges.
+        for i, node in enumerate(join_nodes):
+            pulls = {n: int((per_join + dist_d.size / n_join)
+                            / max(1, len(nodes)))
+                     for n in nodes if n != node}
+            sim.submit(SimTask(
+                f"{app}/join/{i}", app,
+                (per_join + dist_d.size / n_join) / rates["merge_join"],
+                node=node, priority=10, deps=tuple(map1 + map2),
+                transfers=pulls))
+    else:
+        # hash join: broadcast the whole dim table once per *node* (senders =
+        # dim's home nodes, serialized — the Fig. 4c effect); the first task
+        # on a node builds the table, co-located tasks share it and probe.
+        dim_homes = sorted(dist_d.loc) or nodes
+        seen_nodes: set[int] = set()
+        for i, node in enumerate(join_nodes):
+            first_on_node = node not in seen_nodes
+            seen_nodes.add(node)
+            src = dim_homes[i % len(dim_homes)]
+            pulls = {src: int(dist_d.size)} \
+                if (first_on_node and src != node) else {}
+            dur = per_join / rates["hash_probe"]
+            if first_on_node:
+                dur += dist_d.size / rates["hash_build"]
+            sim.submit(SimTask(
+                f"{app}/join/{i}", app, dur, node=node, priority=10,
+                deps=tuple(map1 + map2), transfers=pulls))
+
+    # ---- Final aggregation --------------------------------------------------
+    join_names = [t for t in sim.tasks if t.startswith(f"{app}/join/")]
+    agg_node = join_nodes[0] if join_nodes else nodes[0]
+    pulls = {n: int(dist_f.size / max(1, n_join) / 16)
+             for n in set(join_nodes) if n != agg_node}
+    sim.submit(SimTask(f"{app}/agg", app,
+                       dist_f.size / 16 / rates["agg"], node=agg_node,
+                       priority=10, deps=tuple(join_names),
+                       transfers=pulls))
+
+
+# -- real-data-plane execution (correctness path) --------------------------------
+
+
+def execute_query_jax(fact: Table, dim: Table, method: str = "hash",
+                      num_groups: int = 64) -> jnp.ndarray:
+    """Run the logical query on the JAX data plane; returns per-group sums."""
+    keep = fact["v0"] > 0
+    filtered = ops.filter_table(fact, keep)
+    joined = ops.join(filtered, dim, method=method)
+    weights = jnp.where(joined["found"] & (joined["valid"] != 0),
+                        joined["v0"] * joined["v1"], 0.0)
+    group = joined["cat"].astype(jnp.int32) % num_groups
+    return ops.groupby_sum(group, weights, num_groups)
+
+
+def reference_query_numpy(fact: Table, dim: Table,
+                          num_groups: int = 64) -> np.ndarray:
+    """Pure-numpy oracle for tests."""
+    fk = np.asarray(fact["key"])
+    v0 = np.asarray(fact["v0"]).astype(np.float64)
+    v1 = np.asarray(fact["v1"]).astype(np.float64)
+    dk = np.asarray(dim["key"])
+    cat = np.asarray(dim["cat"])
+    lookup = {int(k): int(c) for k, c in zip(dk, cat)}
+    out = np.zeros(num_groups)
+    for k, a, b in zip(fk, v0, v1):
+        if a > 0 and int(k) in lookup:
+            out[lookup[int(k)] % num_groups] += a * b
+    return out

@@ -1,0 +1,230 @@
+"""Discrete-event cluster simulator for the serverless control plane.
+
+Reproduces the paper's evaluation environment (6–20 node clusters of
+c5.2xlarge-like machines: 8 function slots/node, ~1.25 GB/s NIC) without the
+EC2 cluster: *compute* rates are calibrated from real timings of the JAX
+operators in ``repro.analytics.operators``; *network* transfers occupy source
+and destination NICs (so hash-join broadcast saturates senders as the cluster
+grows — Fig. 4c — and mis-placed functions pay remote-read costs — Fig. 4e).
+
+Slot accounting goes through the real ``GlobalController`` (Omega-style
+commits + priority preemption), so Fig. 8's fine-grained sharing runs the
+actual control plane, not a model of it.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Mapping, Sequence
+
+from repro.core.controllers import Claim, ConflictError, GlobalController
+
+DEFAULT_NET_BW = 1.25e9        # bytes/s per node NIC (10 Gbps)
+DEFAULT_SLOTS = 8              # vCPUs per c5.2xlarge
+
+
+@dataclass
+class SimTask:
+    name: str
+    app: str
+    duration: float                         # compute seconds (one slot)
+    node: int | None = None                 # None = any node (flexible)
+    deps: tuple[str, ...] = ()
+    priority: int = 0
+    # bytes to pull from each source node before compute starts
+    transfers: Mapping[int, int] = field(default_factory=dict)
+    started: float = -1.0
+    finished: float = -1.0
+
+
+@dataclass
+class Timeline:
+    samples: list = field(default_factory=list)   # (t, used, total)
+
+    def record(self, t: float, used: int, total: int):
+        self.samples.append((t, used, total))
+
+    def allocation_rate(self, t0: float = 0.0, t1: float | None = None):
+        """Time-weighted mean used/total over [t0, t1]."""
+        if not self.samples:
+            return 0.0
+        pts = sorted(self.samples)
+        t1 = t1 if t1 is not None else pts[-1][0]
+        area = 0.0
+        for (ta, ua, tot), (tb, _, _) in zip(pts, pts[1:] + [(t1, 0, 1)]):
+            lo, hi = max(ta, t0), min(tb, t1)
+            if hi > lo and tot:
+                area += (hi - lo) * ua / tot
+        return area / max(t1 - t0, 1e-9)
+
+
+class ClusterSim:
+    """Event-driven simulator; one slot per task, NICs serialize transfers."""
+
+    def __init__(self, gc: GlobalController, net_bw: float = DEFAULT_NET_BW):
+        self.gc = gc
+        self.net_bw = net_bw
+        self.tasks: dict[str, SimTask] = {}
+        self.done: set[str] = set()
+        self.now = 0.0
+        self.nic_free_send = {n: 0.0 for n in gc.total}
+        self.nic_free_recv = {n: 0.0 for n in gc.total}
+        self.timeline = Timeline()
+        self.app_finish: dict[str, float] = {}
+        self.app_cost: dict[str, float] = {}
+        self._events: list = []
+        self._counter = itertools.count()
+        self._running: dict[str, Claim] = {}
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, task: SimTask):
+        assert task.name not in self.tasks
+        self.tasks[task.name] = task
+
+    def submit_all(self, tasks: Iterable[SimTask]):
+        for t in tasks:
+            self.submit(t)
+
+    # -- engine ----------------------------------------------------------------
+
+    def _ready(self, task: SimTask) -> bool:
+        return task.started < 0 and all(d in self.done for d in task.deps)
+
+    def _transfer_time(self, task: SimTask, dst: int) -> float:
+        """Serialize on src-send and dst-recv NICs; returns completion time."""
+        start = self.now
+        end = start
+        for src, nbytes in sorted(task.transfers.items()):
+            if src == dst or nbytes <= 0:
+                continue
+            t0 = max(self.nic_free_send[src], self.nic_free_recv[dst], start)
+            dt = nbytes / self.net_bw
+            self.nic_free_send[src] = t0 + dt
+            self.nic_free_recv[dst] = t0 + dt
+            end = max(end, t0 + dt)
+        return end
+
+    def _try_start(self):
+        # priority-ordered ready tasks (the global controller arbitrates)
+        ready = sorted(
+            (t for t in self.tasks.values() if self._ready(t)),
+            key=lambda t: (-t.priority, t.name))
+        for task in ready:
+            status = self.gc.node_status()
+            if task.node is not None:
+                candidates = [task.node]
+            else:  # flexible: most-free node first (backfill)
+                candidates = sorted(
+                    status.free_slots, key=lambda n: -status.free_slots[n])
+            placed = False
+            for node in candidates:
+                if status.free_slots.get(node, 0) <= 0:
+                    continue
+                try:
+                    claim = self.gc.commit(task.app, task.priority, [node],
+                                           tag=task.name)
+                except ConflictError:
+                    continue
+                ready_at = self._transfer_time(task, node)
+                task.started = self.now
+                finish = ready_at + task.duration
+                self._running[task.name] = claim
+                heapq.heappush(self._events,
+                               (finish, next(self._counter), task.name))
+                self.app_cost[task.app] = self.app_cost.get(task.app, 0.0) \
+                    + (finish - self.now)
+                placed = True
+                break
+            if not placed and task.node is not None:
+                continue
+        self._sample()
+
+    def _sample(self):
+        used = sum(self.gc.used.values())
+        total = sum(self.gc.total.values())
+        self.timeline.record(self.now, used, total)
+
+    def run(self, until: float | None = None) -> dict:
+        self._try_start()
+        while self._events:
+            t, _, name = heapq.heappop(self._events)
+            if until is not None and t > until:
+                self.now = until
+                break
+            self.now = t
+            task = self.tasks[name]
+            task.finished = t
+            self.done.add(name)
+            self.gc.release(self._running.pop(name))
+            self.app_finish[task.app] = max(
+                self.app_finish.get(task.app, 0.0), t)
+            self._try_start()
+        self._sample()
+        return {
+            "completion": dict(self.app_finish),
+            "cost_slot_seconds": dict(self.app_cost),
+            "allocation": self.timeline,
+        }
+
+
+def make_cluster(num_nodes: int, slots: int = DEFAULT_SLOTS,
+                 net_bw: float = DEFAULT_NET_BW) -> tuple[GlobalController,
+                                                          ClusterSim]:
+    gc = GlobalController({n: slots for n in range(num_nodes)})
+    return gc, ClusterSim(gc, net_bw)
+
+
+# -- calibration ------------------------------------------------------------------
+
+
+_RATE_CACHE: dict[str, float] = {}
+
+
+def calibrated_rates(sample_rows: int = 1 << 18, force: bool = False) -> dict:
+    """Measure real bytes/s of the JAX operators on this host (used as the
+    simulator's per-slot compute rates). Cached per process."""
+    if _RATE_CACHE and not force:
+        return dict(_RATE_CACHE)
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analytics import operators as ops
+
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, sample_rows, sample_rows), jnp.int32)
+    bkeys = jnp.asarray(rng.permutation(sample_rows)[: sample_rows // 4],
+                        jnp.int32)
+    nbytes = sample_rows * 8.0
+
+    def timeit(fn, *args):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 3
+
+    slots_tbl = ops.build_hash_table(bkeys)
+    _RATE_CACHE.update({
+        "scan": nbytes / timeit(
+            lambda k: jnp.sum(jnp.where(k % 3 == 0, k, 0)), keys),
+        "sort": nbytes / timeit(lambda k: jnp.sort(k), keys),
+        "hash_build": (bkeys.shape[0] * 8.0) / timeit(
+            ops.build_hash_table, bkeys),
+        "hash_probe": nbytes / timeit(
+            ops.hash_join_indices, keys, bkeys, slots_tbl),
+        "merge_join": nbytes / timeit(
+            ops.sort_merge_join_indices, keys, bkeys),
+        "agg": nbytes / timeit(
+            lambda k: ops.groupby_sum(k % 1024,
+                                      jnp.ones_like(k, jnp.float32), 1024),
+            keys),
+    })
+    return dict(_RATE_CACHE)

@@ -1,0 +1,157 @@
+"""Distributed tables for the serverless-analytics case study.
+
+A ``Table`` is a dict of equal-length columns (jnp arrays). A
+``DistTable`` is a table partitioned across cluster nodes (the paper's
+per-node data distribution), carrying the per-node byte counts that decision
+nodes consume as ``data_dist`` (Fig. 6 input).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decisions import DataDist
+
+
+@dataclass
+class Table:
+    columns: dict
+
+    def __post_init__(self):
+        lens = {k: v.shape[0] for k, v in self.columns.items()}
+        assert len(set(lens.values())) <= 1, lens
+
+    @property
+    def num_rows(self) -> int:
+        return next(iter(self.columns.values())).shape[0] \
+            if self.columns else 0
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                   for v in self.columns.values())
+
+    def select(self, *names: str) -> "Table":
+        return Table({n: self.columns[n] for n in names})
+
+    def __getitem__(self, name: str):
+        return self.columns[name]
+
+    def take(self, idx) -> "Table":
+        return Table({k: jnp.take(v, idx, axis=0)
+                      for k, v in self.columns.items()})
+
+    def mask(self, keep) -> "Table":
+        idx = jnp.nonzero(keep, size=int(np.sum(np.asarray(keep))))[0]
+        return self.take(idx)
+
+    def concat(self, other: "Table") -> "Table":
+        return Table({k: jnp.concatenate([v, other.columns[k]])
+                      for k, v in self.columns.items()})
+
+
+@dataclass
+class DistTable:
+    """A table partitioned over cluster nodes."""
+
+    name: str
+    partitions: dict[int, Table] = field(default_factory=dict)  # node -> part
+
+    @property
+    def num_rows(self) -> int:
+        return sum(p.num_rows for p in self.partitions.values())
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes for p in self.partitions.values())
+
+    def data_dist(self) -> DataDist:
+        per_node = {n: p.nbytes for n, p in self.partitions.items()}
+        sizes = np.array([p.num_rows for p in self.partitions.values()],
+                         dtype=np.float64)
+        skew = float(sizes.max() / max(sizes.mean(), 1e-9)) if len(sizes) \
+            else 0.0
+        return DataDist(self.name, per_node, rows=self.num_rows, skew=skew)
+
+    def gather(self) -> Table:
+        parts = [p for _, p in sorted(self.partitions.items())]
+        out = parts[0]
+        for p in parts[1:]:
+            out = out.concat(p)
+        return out
+
+
+def synth_table(name: str, rows: int, key_space: int, seed: int = 0,
+                distribution: str = "uniform", pareto_a: float = 1.2,
+                value_cols: int = 2, unique_keys: bool = False) -> Table:
+    """Synthetic table generator (uniform or Pareto-skewed keys)."""
+    rng = np.random.default_rng(seed)
+    if unique_keys:
+        assert rows <= key_space
+        keys = rng.permutation(key_space)[:rows]
+    elif distribution == "uniform":
+        keys = rng.integers(0, key_space, size=rows)
+    elif distribution == "pareto":
+        raw = rng.pareto(pareto_a, size=rows)
+        keys = np.minimum((raw / (raw.max() + 1e-9) * key_space),
+                          key_space - 1).astype(np.int64)
+    else:
+        raise ValueError(distribution)
+    cols = {"key": jnp.asarray(keys, jnp.int32)}
+    for i in range(value_cols):
+        cols[f"v{i}"] = jnp.asarray(
+            rng.standard_normal(rows, dtype=np.float32))
+    return Table(cols)
+
+
+@dataclass
+class PhantomTable:
+    """Size-only stand-in for GB-scale simulator experiments (the paper's
+    400 MB–6 GB tables): carries the data distribution without materializing
+    arrays. Quacks like DistTable for planning purposes."""
+
+    name: str
+    bytes_per_node: Mapping[int, int]
+    skew: float = 1.0
+
+    @property
+    def nbytes(self) -> int:
+        return sum(self.bytes_per_node.values())
+
+    def data_dist(self) -> DataDist:
+        return DataDist(self.name, dict(self.bytes_per_node),
+                        rows=self.nbytes // 8, skew=self.skew)
+
+
+def phantom(name: str, total_bytes: int, nodes: Sequence[int],
+            distribution: str = "uniform", pareto_a: float = 1.2,
+            seed: int = 0) -> PhantomTable:
+    nodes = list(nodes)
+    if distribution == "uniform":
+        share = np.full(len(nodes), 1.0 / len(nodes))
+    elif distribution == "pareto":
+        rng = np.random.default_rng(seed)
+        raw = rng.pareto(pareto_a, size=len(nodes)) + 0.05
+        share = raw / raw.sum()
+    else:
+        raise ValueError(distribution)
+    per = {n: int(total_bytes * s) for n, s in zip(nodes, share)}
+    skew = float(max(share) / (sum(share) / len(share)))
+    return PhantomTable(name, per, skew)
+
+
+def distribute(table: Table, nodes: Sequence[int], name: str,
+               by: str = "round-robin", seed: int = 0) -> DistTable:
+    n = table.num_rows
+    order = np.arange(n)
+    if by == "random":
+        order = np.random.default_rng(seed).permutation(n)
+    chunks = np.array_split(order, len(nodes))
+    parts = {node: table.take(jnp.asarray(c))
+             for node, c in zip(nodes, chunks)}
+    return DistTable(name, parts)

@@ -1,0 +1,9 @@
+"""Checkpointing, restart supervision, elastic rescaling."""
+
+from repro.ckpt.checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.ckpt.supervisor import StragglerEvent, Supervisor  # noqa: F401

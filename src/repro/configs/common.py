@@ -1,0 +1,67 @@
+"""Shared helpers for architecture configs: input specs per shape cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, **no device allocation**) for every model input of a given
+(arch x shape) cell — the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Frontend, ModelConfig, ShapeConfig
+from repro.models.lm import AUDIO_FRAME_DIM
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for train/prefill inputs or the decode token batch."""
+    b = shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+
+    if shape.mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    specs: dict = {}
+    if cfg.frontend == Frontend.VISION_STUB.value:
+        n_text = s - cfg.stub_patches
+        assert n_text > 0
+        specs["tokens"] = jax.ShapeDtypeStruct((b, n_text), i32)
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.stub_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    elif cfg.frontend == Frontend.AUDIO_STUB.value:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["frame_embeds"] = jax.ShapeDtypeStruct(
+            (b, s, AUDIO_FRAME_DIM), jnp.dtype(cfg.dtype))
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.mode == "train":
+        # labels align with text positions (== tokens shape; for the VLM
+        # stub the patch positions carry no loss)
+        specs["labels"] = jax.ShapeDtypeStruct(specs["tokens"].shape, i32)
+    return specs
+
+
+def concrete_inputs(cfg: ModelConfig, shape: ShapeConfig, key=None) -> dict:
+    """Small real arrays matching input_specs (for smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out = {}
+    for name, spec in input_specs(cfg, shape).items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, spec.shape, 0,
+                                           max(2, cfg.vocab_size - 1),
+                                           spec.dtype)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, spec.dtype)
+    return out
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """Shape cells that apply to this arch (long_500k: sub-quadratic only)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        names.append("long_500k")
+    return names

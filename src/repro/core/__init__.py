@@ -1,0 +1,42 @@
+"""Proteus-JAX core: decision workflows + decentralized control plane.
+
+The paper's primary contribution — an extensible serverless control plane —
+is implemented here as: decision nodes/workflows (config-time and run-time
+control decisions), and a decentralized controller pair (global resource view
++ per-application private controllers with Omega-style priority commits).
+"""
+
+from .config import (  # noqa: F401
+    BlockKind,
+    CheckpointConfig,
+    FFNKind,
+    Frontend,
+    ModelConfig,
+    MoEConfig,
+    OptimizerConfig,
+    ParallelConfig,
+    RunConfig,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+    XLSTMConfig,
+    fingerprint,
+    override,
+    replace,
+)
+from .decisions import (  # noqa: F401
+    DataDist,
+    Decision,
+    DecisionContext,
+    DecisionNode,
+    DecisionWorkflow,
+    NodeStatus,
+    Schedule,
+    default_node,
+)
+from .controllers import (  # noqa: F401
+    Claim,
+    ConflictError,
+    GlobalController,
+    PrivateController,
+)

@@ -1,0 +1,226 @@
+"""Decision workflows — the paper's core abstraction (§5.1), adapted to TPU.
+
+A *decision node* receives system knowledge (``DecisionContext``: data
+distribution + node/mesh status) and emits a decision tuple
+``Decision(func, scale, schedule)``:
+
+  * ``func``     — which implementation variant to run (paper: hash_join vs
+                   merge_join; here e.g. "head_tp" vs "seq_tp" attention, or
+                   "all_to_all" vs "gather" MoE dispatch),
+  * ``scale``    — how many instances / how much parallelism (paper: function
+                   count ∝ data size; here microbatch count, DP width, batch
+                   size),
+  * ``schedule`` — a placement policy over a node set (paper: round-robin vs
+                   packing; here pod-spread vs pod-packing, slot selection).
+
+A *decision workflow* is a DAG of decision nodes evaluated at runtime, between
+the stages of an application (query phases, training steps, serving batches).
+Applications that need no customization fall back to ``default_node`` —
+mirroring the paper's fallback to plain function workflows.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+
+# ---------------------------------------------------------------------------
+# System knowledge exposed to decision nodes (paper Fig. 5, step 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DataDist:
+    """Distribution of one named datum across the cluster/mesh.
+
+    For analytics: per-node byte counts of a table. For LM workloads: tensor
+    sizes, token-per-expert histograms, KV-cache occupancy.
+    """
+
+    name: str
+    bytes_per_node: Mapping[int, int] = field(default_factory=dict)
+    rows: int = 0
+    skew: float = 0.0                     # max/mean per-node load
+
+    @property
+    def size(self) -> int:
+        return sum(self.bytes_per_node.values())
+
+    @property
+    def loc(self) -> frozenset[int]:
+        return frozenset(n for n, b in self.bytes_per_node.items() if b > 0)
+
+
+@dataclass
+class NodeStatus:
+    """Cluster/mesh resource view offered by the global controller."""
+
+    total_slots: Mapping[int, int] = field(default_factory=dict)
+    free_slots: Mapping[int, int] = field(default_factory=dict)
+    link_bw: float = 50e9                 # bytes/s per link (ICI)
+    intra_bw: float = 819e9               # bytes/s local (HBM)
+    pods: Mapping[int, Sequence[int]] = field(default_factory=dict)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.total_slots)
+
+    def free(self, nodes: Iterable[int] | None = None) -> int:
+        nodes = list(nodes) if nodes is not None else list(self.free_slots)
+        return sum(self.free_slots.get(n, 0) for n in nodes)
+
+
+@dataclass
+class DecisionContext:
+    """Everything a decision node may look at (system + app knowledge)."""
+
+    data_dist: Mapping[str, DataDist] = field(default_factory=dict)
+    node_status: NodeStatus = field(default_factory=NodeStatus)
+    app: Mapping[str, Any] = field(default_factory=dict)      # app semantics
+    profile: Mapping[str, Any] = field(default_factory=dict)  # runtime feedback
+    # Feedback from previous runs (paper Fig. 5, step 4) is merged into
+    # ``profile`` by the private controller between executions.
+
+
+# ---------------------------------------------------------------------------
+# Decision output (paper Fig. 6, "output decision tuple")
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Schedule:
+    policy: str                           # "round-robin" | "packing" | custom
+    nodes: tuple[int, ...]                # candidate node set
+    slots_per_node: int = 8               # capacity used by the packing policy
+
+    def place(self, n_instances: int) -> tuple[int, ...]:
+        """Materialize instance -> node placement under this policy."""
+        nodes = list(self.nodes)
+        if not nodes:
+            return ()
+        if self.policy == "packing":
+            # Fill each node to capacity before opening the next one
+            # (the paper's consolidation strategy for skewed data).
+            cap = max(1, self.slots_per_node)
+            return tuple(
+                nodes[min(i // cap, len(nodes) - 1)] for i in range(n_instances)
+            )
+        # round-robin: spread instances across the node set.
+        return tuple(nodes[i % len(nodes)] for i in range(n_instances))
+
+
+@dataclass(frozen=True)
+class Decision:
+    func: str
+    scale: int
+    schedule: Schedule
+    extras: tuple[tuple[str, Any], ...] = ()
+
+    def extra(self, key: str, default: Any = None) -> Any:
+        return dict(self.extras).get(key, default)
+
+
+DecisionFn = Callable[[DecisionContext], Decision]
+
+
+# ---------------------------------------------------------------------------
+# Decision nodes and workflows
+# ---------------------------------------------------------------------------
+
+
+class DecisionNode:
+    """A named, user-supplied control-plane decision point."""
+
+    def __init__(self, name: str, fn: DecisionFn,
+                 fallback: DecisionFn | None = None):
+        self.name = name
+        self.fn = fn
+        self.fallback = fallback
+        self.history: list[tuple[float, Decision]] = []
+
+    def decide(self, ctx: DecisionContext) -> Decision:
+        try:
+            decision = self.fn(ctx)
+        except Exception:
+            if self.fallback is None:
+                raise
+            decision = self.fallback(ctx)
+        self.history.append((time.monotonic(), decision))
+        return decision
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"DecisionNode({self.name!r})"
+
+
+def default_node(name: str, func: str = "default") -> DecisionNode:
+    """The paper's fallback: scale = all free slots, round-robin placement."""
+
+    def fn(ctx: DecisionContext) -> Decision:
+        nodes = tuple(sorted(ctx.node_status.free_slots))
+        scale = max(1, ctx.node_status.free(nodes))
+        return Decision(func, scale, Schedule("round-robin", nodes))
+
+    return DecisionNode(name, fn)
+
+
+@dataclass
+class Stage:
+    """One stage of a decision workflow: a decision node plus downstream
+    function group it controls (the paper: "the scheduling of a group of
+    functions as a decision node")."""
+
+    node: DecisionNode
+    depends_on: tuple[str, ...] = ()
+
+
+class DecisionWorkflow:
+    """A DAG of decision stages evaluated at runtime.
+
+    ``run`` walks stages in topological order, calling a user ``executor``
+    for each resolved decision; executors return runtime feedback that is
+    folded into the context for downstream stages (paper Fig. 5, step 4).
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.stages: dict[str, Stage] = {}
+        self.order: list[str] = []
+
+    def add(self, node: DecisionNode,
+            depends_on: Sequence[str] = ()) -> "DecisionWorkflow":
+        missing = [d for d in depends_on if d not in self.stages]
+        if missing:
+            raise ValueError(f"unknown dependencies {missing} for {node.name}")
+        if node.name in self.stages:
+            raise ValueError(f"duplicate stage {node.name}")
+        self.stages[node.name] = Stage(node, tuple(depends_on))
+        self.order.append(node.name)
+        return self
+
+    def toposorted(self) -> list[str]:
+        # insertion order is already valid because add() checks deps exist
+        return list(self.order)
+
+    def run(self, ctx: DecisionContext,
+            executor: Callable[[str, Decision, DecisionContext], Mapping | None],
+            ) -> dict[str, Decision]:
+        decisions: dict[str, Decision] = {}
+        for name in self.toposorted():
+            stage = self.stages[name]
+            decision = stage.node.decide(ctx)
+            decisions[name] = decision
+            feedback = executor(name, decision, ctx)
+            if feedback:
+                merged = dict(ctx.profile)
+                merged.update({f"{name}.{k}": v for k, v in feedback.items()})
+                ctx.profile = merged
+        return decisions
+
+    def explain(self) -> str:
+        lines = [f"DecisionWorkflow({self.name})"]
+        for name in self.order:
+            deps = self.stages[name].depends_on
+            lines.append(f"  {name} <- {list(deps) or '[]'}")
+        return "\n".join(lines)

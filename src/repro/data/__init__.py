@@ -1,0 +1,8 @@
+"""Data pipeline: synthetic + memmap sources, shard-aware, prefetching."""
+
+from repro.data.pipeline import (  # noqa: F401
+    MemmapSource,
+    Prefetcher,
+    SyntheticSource,
+    write_token_file,
+)

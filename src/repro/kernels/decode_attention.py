@@ -1,0 +1,106 @@
+"""Flash-decode attention — Pallas TPU kernel for the serve_step hot loop.
+
+One new query token per sequence against a long KV cache
+[FlashDecoding++, arXiv:2311.01282 adapted to TPU]. Grid =
+(batch*kv_heads, kv_blocks); the G grouped query heads of each kv head are
+processed together as a (G, hd) tile (MXU-friendly when G*hd >= 128). The
+kv_blocks dimension is sequential on TPU, so the online-softmax state lives
+in VMEM scratch, and blocks beyond the valid cache length short-circuit via
+``pl.when`` (no work issued) — the kernel reads only ceil(len/bk) blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int,
+                   num_k_blocks: int):
+    ki = pl.program_id(1)
+    length = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * block_k < length)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (G, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, bk)
+        k_idx = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_idx < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        m_scr[...] = m_cur
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); caches: (B, S, K, hd); length: (B,) valid prefix.
+
+    Returns (B, H, hd). H = K * G (GQA); q heads are grouped per kv head.
+    """
+    b, h, hd = q.shape
+    _, s, kh, _ = k_cache.shape
+    g = h // kh
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    nk = s // block_k
+
+    qb = q.reshape(b, kh, g, hd).reshape(b * kh, g, hd)
+    kb = k_cache.transpose(0, 2, 1, 3).reshape(b * kh, s, hd)
+    vb = v_cache.transpose(0, 2, 1, 3).reshape(b * kh, s, hd)
+    lens = jnp.repeat(length.astype(jnp.int32), kh)
+
+    kernel = functools.partial(_decode_kernel, scale=hd ** -0.5,
+                               block_k=block_k, num_k_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kh, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, kk: (i,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, hd), lambda i, kk: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda i, kk: (i, kk, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda i, kk: (i, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda i, kk: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qb, kb, vb)
+
+    return out.reshape(b, kh, g, hd).reshape(b, h, hd)

@@ -1,0 +1,114 @@
+"""Causal flash attention — Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention tiling [arXiv:2205.14135]: the grid is
+(batch*heads, q_blocks, k_blocks); TPU executes the minor-most grid dim
+sequentially per core, so the online-softmax state (m, l, acc) lives in VMEM
+scratch that persists across the k_block iterations of one q_block. Block
+shapes are MXU-aligned (multiples of 128 in production configs; smaller in
+tests). Causal masking is applied per-block; fully-masked upper-triangle
+blocks are skipped with ``pl.when`` (no MXU work issued).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  num_k_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (not causal) or (ki * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)              # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            q_idx = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_idx = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_idx >= k_idx, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # (bq,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        m_scr[...] = m_cur
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q, k, v: (B, S, H, hd) with KV pre-expanded to H heads.
+
+    Returns (B, S, H, hd). VMEM working set per grid step:
+    bq*hd (q) + 2*bk*hd (kv) + bq*bk (scores) + bq*hd (acc), fp32.
+    """
+    b, s, h, hd = q.shape
+    assert k.shape == v.shape == (b, s, h, hd)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    nq, nk = s // block_q, s // block_k
+
+    def to_bh(t):  # (B,S,H,hd) -> (B*H, S, hd)
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    qb, kb, vb = to_bh(q), to_bh(k), to_bh(v)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, causal=causal, block_q=block_q,
+        block_k=block_k, num_k_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda i, j, kk: (i, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda i, j, kk: (i, kk, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda i, j, kk: (i, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda i, j, kk: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),          # running max m
+            pltpu.VMEM((block_q,), jnp.float32),          # running sum l
+            pltpu.VMEM((block_q, hd), jnp.float32),       # accumulator
+        ],
+        interpret=interpret,
+    )(qb, kb, vb)
+
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,52 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, interpret-mode kernel or
+jnp reference elsewhere. These are the functions the model/data plane calls.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.partition import (
+    partition_histogram as _hist,
+    partition_scatter as _scatter,
+)
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, force_kernel: bool = False):
+    """(B,S,H,hd) attention; kernel on TPU, oracle elsewhere."""
+    if on_tpu() or force_kernel:
+        return _flash(q, k, v, causal=causal, block_q=block_q,
+                      block_k=block_k, interpret=not on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k_cache, v_cache, length, block_k: int = 512,
+                     force_kernel: bool = False):
+    if on_tpu() or force_kernel:
+        return _decode(q, k_cache, v_cache, length, block_k=block_k,
+                       interpret=not on_tpu())
+    return ref.decode_attention_ref(q, k_cache, v_cache, length)
+
+
+def partition_histogram(part_ids, num_partitions: int, block: int = 1024,
+                        force_kernel: bool = False):
+    if on_tpu() or force_kernel:
+        return _hist(part_ids, num_partitions, block=block,
+                     interpret=not on_tpu())
+    return ref.partition_histogram_ref(part_ids, num_partitions)
+
+
+def partition_scatter(rows, part_ids, num_partitions: int, block: int = 1024,
+                      force_kernel: bool = False):
+    if on_tpu() or force_kernel:
+        return _scatter(rows, part_ids, num_partitions, block=block,
+                        interpret=not on_tpu())
+    return ref.partition_scatter_ref(rows, part_ids, num_partitions)

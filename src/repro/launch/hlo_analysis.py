@@ -1,0 +1,247 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` visits each while-loop body exactly once,
+so scan-over-layers / microbatch-accumulation programs are undercounted by
+the trip count. This module parses optimized HLO text, reconstructs the
+computation call graph (while bodies, fusions, calls), extracts loop trip
+counts from the while condition computations, and accumulates
+
+  * dot/convolution FLOPs (the MXU work; elementwise flops are negligible),
+  * per-collective-kind byte volumes (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute),
+
+each scaled by the product of enclosing trip counts. Validated against
+``cost_analysis()`` on unrolled programs (tests/test_hlo_analysis.py).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "c128": 16, "f16": 2, "bf16": 2, "s16": 2,
+                "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_SHAPE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->")
+_WHILE = re.compile(r"\bwhile\(.*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_COLL = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_DOT = re.compile(r"\bdot\(")
+_CONV = re.compile(r"\bconvolution\(")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_KERNEL = re.compile(r"window=\{size=([0-9x]+)")
+
+
+def _shapes(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _numel(dims: list[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _nbytes(dt: str, dims: list[int]) -> int:
+    return _numel(dims) * _DTYPE_BYTES[dt]
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0) \
+                + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) \
+                + v * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def split_computations(hlo: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    entry = ""
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _COMP_HEADER.match(line)
+        if m and stripped.endswith("{"):
+            current = Computation(m.group(2))
+            comps[current.name] = current
+            if m.group(1):
+                entry = current.name
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None and stripped:
+            current.lines.append(stripped)
+    return comps, entry
+
+
+def _result_shapes(line: str) -> list[tuple[str, list[int]]]:
+    """Shapes on the LHS (result) of an instruction line."""
+    if " = " not in line:
+        return []
+    rhs = line.split(" = ", 1)[1]
+    head = rhs.split("(", 1)[0]
+    return _shapes(head)
+
+
+_OPERAND_NAMES = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(line: str) -> list[str]:
+    """Names of the operands of an instruction (optimized HLO has no operand
+    types inline — resolve via the computation's symbol table)."""
+    if " = " not in line:
+        return []
+    rhs = line.split(" = ", 1)[1]
+    if "(" not in rhs:
+        return []
+    inner = rhs.split("(", 1)[1]
+    depth, end = 1, len(inner)
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND_NAMES.findall(inner[:end])
+
+
+def _symtab(comp: "Computation") -> dict[str, list[tuple[str, list[int]]]]:
+    tab: dict[str, list[tuple[str, list[int]]]] = {}
+    for line in comp.lines:
+        if " = " not in line:
+            continue
+        name = line.split(" = ", 1)[0].strip().lstrip("%")
+        tab[name] = _result_shapes(line)
+    return tab
+
+
+def _dot_flops(line: str, symtab: dict) -> float:
+    res = _result_shapes(line)
+    names = _operand_names(line)
+    if not res or not names:
+        return 0.0
+    out_elems = sum(_numel(dims) for _, dims in res)
+    lhs_shapes = symtab.get(names[0], [])
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1]
+    m = _CONTRACT.search(line)
+    contracted = 1
+    if m:
+        for idx in m.group(1).split(","):
+            if idx:
+                contracted *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(line: str, symtab: dict) -> float:
+    res = _result_shapes(line)
+    names = _operand_names(line)
+    if not res or len(names) < 2:
+        return 0.0
+    out_elems = _numel(res[0][1])
+    kshapes = symtab.get(names[1], [])
+    if not kshapes:
+        return 0.0
+    kernel_dims = kshapes[0][1]
+    # flops ~= 2 * out_elems * kernel_elems / out_channels
+    kernel_elems = _numel(kernel_dims)
+    out_ch = res[0][1][-1] if res[0][1] else 1
+    per_out = kernel_elems / max(out_ch, 1)
+    return 2.0 * out_elems * max(per_out, 1.0)
+
+
+def _trip_count(cond: Computation) -> int:
+    """Extract the loop bound from a while condition computation."""
+    best = 1
+    for line in cond.lines:
+        if "compare(" in line:
+            for c in _CONST_INT.findall(line):
+                best = max(best, int(c))
+    if best == 1:
+        for line in cond.lines:
+            for c in _CONST_INT.findall(line):
+                best = max(best, int(c))
+    return max(best, 1)
+
+
+def analyze(hlo: str) -> Costs:
+    comps, entry = split_computations(hlo)
+    memo: dict[str, Costs] = {}
+
+    def cost_of(name: str, stack: tuple = ()) -> Costs:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return Costs()
+        comp = comps[name]
+        symtab = _symtab(comp)
+        total = Costs()
+        for line in comp.lines:
+            wm = _WHILE.search(line)
+            if wm:
+                cond_name, body_name = wm.group(1), wm.group(2)
+                tm = _TRIP.search(line)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    trips = _trip_count(comps.get(cond_name,
+                                                  Computation("")))
+                total.add(cost_of(body_name, stack + (name,)), trips)
+                total.add(cost_of(cond_name, stack + (name,)), trips)
+                continue
+            cm = _COLL.search(line)
+            if cm and " = " in line and "-done" not in line.split("(")[0]:
+                kind = cm.group(1)
+                b = sum(_nbytes(dt, dims) for dt, dims in
+                        _result_shapes(line))
+                total.collective_bytes[kind] = \
+                    total.collective_bytes.get(kind, 0) + b
+                total.collective_counts[kind] = \
+                    total.collective_counts.get(kind, 0) + 1
+            if _DOT.search(line):
+                total.flops += _dot_flops(line, symtab)
+            elif _CONV.search(line):
+                total.flops += _conv_flops(line, symtab)
+            for callee in _CALLS.findall(line):
+                if "fusion" in line or "call(" in line \
+                        or "custom-call" in line or "reduce" in line \
+                        or "sort(" in line or "scatter" in line \
+                        or "select-and-scatter" in line or "map(" in line:
+                    total.add(cost_of(callee, stack + (name,)), 1.0)
+        memo[name] = total
+        return total
+
+    return cost_of(entry)

@@ -1,0 +1,9 @@
+"""Model zoo: unified LM covering all assigned architecture families."""
+
+from repro.models.lm import (  # noqa: F401
+    decode_state_axes,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_lm,
+)

@@ -1,0 +1,129 @@
+"""Shared model layers: norms, embeddings, RoPE, SwiGLU MLP.
+
+All layers are functional: ``init_*`` builds a param pytree (plus a parallel
+pytree of logical-axis annotations used for sharding), ``apply`` style
+functions consume it. Compute dtype is bf16 by default with fp32 norm/softmax
+accumulation.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import logical_shard, pad_to_multiple
+
+Params = dict
+Axes = dict
+
+VOCAB_PAD = 128  # pad vocab to a multiple of this (MXU lane + TP divisibility)
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -- RMSNorm -----------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.bfloat16) -> tuple[Params, Axes]:
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- Embedding / unembedding ---------------------------------------------------
+
+
+def init_embedding(vocab: int, d: int, key, dtype=jnp.bfloat16,
+                   tie: bool = False) -> tuple[Params, Axes]:
+    vpad = pad_to_multiple(vocab, VOCAB_PAD)
+    k1, k2 = jax.random.split(key)
+    params: Params = {"table": _init(k1, (vpad, d), d ** -0.5, dtype)}
+    axes: Axes = {"table": ("vocab", "w_embed")}
+    if not tie:
+        params["unembed"] = _init(k2, (d, vpad), d ** -0.5, dtype)
+        axes["unembed"] = ("w_embed", "vocab")
+    return params, axes
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(params["table"], tokens, axis=0)
+    return logical_shard(out, "batch", "seq", "embed")
+
+
+def unembed(params: Params, x: jax.Array, true_vocab: int) -> jax.Array:
+    """Project to (padded) logits; padded columns are forced to -inf."""
+    table = params.get("unembed")
+    if table is None:
+        table = params["table"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, table)
+    logits = logical_shard(logits, "batch", "seq", "vocab")
+    vpad = table.shape[-1]
+    if vpad != true_vocab:
+        mask = (jnp.arange(vpad) < true_vocab)
+        logits = jnp.where(mask[None, None, :], logits, jnp.float32(-1e9))
+    return logits
+
+
+# -- Rotary position embeddings ------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = np.arange(0, head_dim, 2, dtype=np.float64) / head_dim
+    return jnp.asarray(1.0 / (theta ** exponents), jnp.float32)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                    # (..., s, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.astype(x.dtype)
+
+
+# -- SwiGLU MLP ----------------------------------------------------------------
+
+
+def init_mlp(d: int, d_ff: int, key, dtype=jnp.bfloat16) -> tuple[Params, Axes]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "gate": _init(k1, (d, d_ff), d ** -0.5, dtype),
+        "up": _init(k2, (d, d_ff), d ** -0.5, dtype),
+        "down": _init(k3, (d_ff, d), d_ff ** -0.5, dtype),
+    }
+    axes = {
+        "gate": ("w_embed", "mlp"),
+        "up": ("w_embed", "mlp"),
+        "down": ("mlp", "w_embed"),
+    }
+    return params, axes
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    # Megatron-SP transition point: under seq_tp the residual is
+    # sequence-sharded; "mlp_seq" -> None triggers the all-gather here and
+    # the output annotation below reduce-scatters back.
+    x = logical_shard(x, "batch", "mlp_seq", "embed")
+    gate = jnp.einsum("bsd,df->bsf", x, params["gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["up"])
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    hidden = logical_shard(hidden, "batch", "mlp_seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", hidden, params["down"])
+    return logical_shard(out, "batch", "seq", "embed")
+
+
+def tree_size(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

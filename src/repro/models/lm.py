@@ -1,0 +1,380 @@
+"""Unified LM covering all assigned families (dense / MoE / SSM / hybrid /
+VLM-stub / audio-stub).
+
+Layers are organized as R repeats of a *block pattern* of period P
+(``cfg.block_pattern``); parameters for each pattern position are stacked over
+repeats and the forward pass is a ``lax.scan`` over repeats with the period
+unrolled inside — this keeps HLO size O(P), independent of depth (essential
+for the 80-layer dry-runs).
+
+All functions are pure and ``jax.eval_shape``-compatible: the multi-pod
+dry-run lowers them with ShapeDtypeStruct params and never allocates.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import BlockKind, FFNKind, Frontend, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    _init,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+from repro.parallel.sharding import logical_shard
+
+Params = dict
+AUDIO_FRAME_DIM = 128   # EnCodec latent dim (stub frontend)
+
+
+# -- structure helpers ----------------------------------------------------------
+
+
+def _pattern(cfg: ModelConfig) -> tuple[list[BlockKind], int]:
+    pattern = [BlockKind(k) for k in cfg.block_pattern]
+    p = len(pattern)
+    assert cfg.num_layers % p == 0, (cfg.num_layers, p)
+    if cfg.moe is not None and cfg.ffn == FFNKind.MOE:
+        assert p % cfg.moe.every_k_layers == 0 or cfg.moe.every_k_layers == 1
+    return pattern, cfg.num_layers // p
+
+
+_BLOCK_INIT: dict[BlockKind, Callable] = {
+    BlockKind.ATTENTION: attn_mod.init_attention,
+    BlockKind.MAMBA: ssm_mod.init_mamba,
+    BlockKind.MLSTM: xlstm_mod.init_mlstm,
+    BlockKind.SLSTM: xlstm_mod.init_slstm,
+}
+
+_BLOCK_APPLY: dict[BlockKind, Callable] = {
+    BlockKind.MAMBA: ssm_mod.mamba,
+    BlockKind.MLSTM: xlstm_mod.mlstm,
+    BlockKind.SLSTM: xlstm_mod.slstm,
+}
+
+
+def _init_layer(cfg: ModelConfig, layer: int, key) -> tuple[Params, dict]:
+    kind = cfg.block_kind(layer)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    block_p, block_a = _BLOCK_INIT[kind](cfg, k1)
+    n1_p, n1_a = init_rmsnorm(cfg.d_model, jnp.dtype(cfg.dtype))
+    params: Params = {"norm1": n1_p, "block": block_p}
+    axes = {"norm1": n1_a, "block": block_a}
+    if cfg.ffn != FFNKind.NONE:
+        n2_p, n2_a = init_rmsnorm(cfg.d_model, jnp.dtype(cfg.dtype))
+        params["norm2"] = n2_p
+        axes["norm2"] = n2_a
+        if cfg.layer_is_moe(layer):
+            ffn_p, ffn_a = moe_mod.init_moe(cfg, k2)
+        else:
+            ffn_p, ffn_a = init_mlp(cfg.d_model, cfg.d_ff, k2,
+                                    jnp.dtype(cfg.dtype))
+        params["ffn"] = ffn_p
+        axes["ffn"] = ffn_a
+    return params, axes
+
+
+def init_lm(cfg: ModelConfig, key) -> tuple[Params, dict]:
+    """Returns (params, logical_axes) with identical tree structure.
+
+    params["blocks"] is a tuple over pattern positions; each leaf is stacked
+    over the R repeats on axis 0 (logical axis "layers").
+    """
+    pattern, repeats = _pattern(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+
+    emb_p, emb_a = init_embedding(cfg.vocab_size, cfg.d_model, keys[-1],
+                                  jnp.dtype(cfg.dtype), tie=cfg.tie_embeddings)
+    fnorm_p, fnorm_a = init_rmsnorm(cfg.d_model, jnp.dtype(cfg.dtype))
+    params: Params = {"embed": emb_p, "final_norm": fnorm_p}
+    axes = {"embed": emb_a, "final_norm": fnorm_a}
+
+    if cfg.frontend == Frontend.VISION_STUB.value:
+        params["patch_proj"] = _init(keys[-2], (cfg.d_model, cfg.d_model),
+                                     cfg.d_model ** -0.5, jnp.dtype(cfg.dtype))
+        axes["patch_proj"] = ("w_embed", None)
+    elif cfg.frontend == Frontend.AUDIO_STUB.value:
+        params["frame_proj"] = _init(keys[-2], (AUDIO_FRAME_DIM, cfg.d_model),
+                                     AUDIO_FRAME_DIM ** -0.5,
+                                     jnp.dtype(cfg.dtype))
+        axes["frame_proj"] = (None, "w_embed")
+
+    blocks = []
+    blocks_axes = []
+    for p in range(len(pattern)):
+        per_repeat = [
+            _init_layer(cfg, r * len(pattern) + p,
+                        keys[r * len(pattern) + p])
+            for r in range(repeats)
+        ]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[pr[0] for pr in per_repeat])
+        ax = jax.tree.map(
+            lambda a: ("layers",) + a,
+            per_repeat[0][1],
+            is_leaf=lambda v: isinstance(v, tuple)
+            and all(isinstance(x, (str, type(None))) for x in v),
+        )
+        blocks.append(stacked)
+        blocks_axes.append(ax)
+    params["blocks"] = tuple(blocks)
+    axes["blocks"] = tuple(blocks_axes)
+    return params, axes
+
+
+# -- forward --------------------------------------------------------------------
+
+
+def _frontend_embed(params: Params, inputs: dict, cfg: ModelConfig):
+    h = embed(params["embed"], inputs["tokens"])
+    if cfg.frontend == Frontend.VISION_STUB.value:
+        patches = jnp.einsum("bpd,de->bpe",
+                             inputs["patch_embeds"].astype(h.dtype),
+                             params["patch_proj"])
+        h = jnp.concatenate([patches, h], axis=1)
+        h = logical_shard(h, "batch", "seq", "embed")
+    elif cfg.frontend == Frontend.AUDIO_STUB.value:
+        h = h + jnp.einsum("bsf,fd->bsd",
+                           inputs["frame_embeds"].astype(h.dtype),
+                           params["frame_proj"])
+        h = logical_shard(h, "batch", "seq", "embed")
+    return h
+
+
+def _apply_block(kind: BlockKind, layer_params: Params, h: jax.Array,
+                 positions: jax.Array, cfg: ModelConfig, chunk: int,
+                 q_chunk: int, is_moe: bool, aux: jax.Array):
+    normed = rmsnorm(layer_params["norm1"], h, cfg.norm_eps)
+    if kind == BlockKind.ATTENTION:
+        out = attn_mod.attention(layer_params["block"], normed, positions,
+                                 cfg, q_chunk=q_chunk)
+    else:
+        out = _BLOCK_APPLY[kind](layer_params["block"], normed, cfg,
+                                 chunk=chunk)
+    h = h + out
+    if "ffn" in layer_params:
+        normed = rmsnorm(layer_params["norm2"], h, cfg.norm_eps)
+        if is_moe:
+            out, layer_aux = moe_mod.moe(layer_params["ffn"], normed, cfg)
+            aux = aux + layer_aux
+        else:
+            out = mlp(layer_params["ffn"], normed)
+        h = h + out
+    h = logical_shard(h, "batch", "seq", "embed")
+    return h, aux
+
+
+def forward_hidden(params: Params, inputs: dict, cfg: ModelConfig,
+                   remat: str = "block", q_chunk: int = 1024,
+                   ssm_chunk: int = 128) -> tuple[jax.Array, jax.Array]:
+    """Full forward up to the final norm. Returns (hidden, moe_aux_loss).
+
+    The unembedding is left to the caller: the training loss fuses it into a
+    sequence-chunked cross-entropy so the fp32 logits (B,S,V) never
+    materialize.
+    """
+    pattern, repeats = _pattern(cfg)
+    h = _frontend_embed(params, inputs, cfg)
+    b, s, _ = h.shape
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def layer_group(carry, group_params):
+        h, aux = carry
+        for p, kind in enumerate(pattern):
+            is_moe = cfg.layer_is_moe(p)   # uniform across repeats (P % k == 0)
+            h, aux = _apply_block(kind, group_params[p], h, positions, cfg,
+                                  ssm_chunk, q_chunk, is_moe, aux)
+        return (h, aux), None
+
+    body = layer_group
+    if remat == "block":
+        body = jax.checkpoint(layer_group,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            layer_group,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux
+
+
+def forward(params: Params, inputs: dict, cfg: ModelConfig,
+            remat: str = "block", q_chunk: int = 1024,
+            ssm_chunk: int = 128) -> tuple[jax.Array, jax.Array]:
+    """Full forward returning fp32 logits (prefill / eval / smoke tests)."""
+    h, aux = forward_hidden(params, inputs, cfg, remat=remat,
+                            q_chunk=q_chunk, ssm_chunk=ssm_chunk)
+    logits = unembed(params["embed"], h, cfg.vocab_size).astype(jnp.float32)
+    return logits, aux
+
+
+# -- decode ----------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Per-pattern-position stacked recurrent state (KV caches / SSM states)."""
+    pattern, repeats = _pattern(cfg)
+
+    def one(kind: BlockKind):
+        if kind == BlockKind.ATTENTION:
+            k, v = attn_mod.init_kv_cache(cfg, batch, max_seq)
+            return {"k": k, "v": v}
+        if kind == BlockKind.MAMBA:
+            return ssm_mod.init_mamba_state(cfg, batch)
+        if kind == BlockKind.MLSTM:
+            return xlstm_mod.init_mlstm_state(cfg, batch)
+        return xlstm_mod.init_slstm_state(cfg, batch)
+
+    states = tuple(
+        jax.tree.map(lambda *xs: jnp.stack(xs),
+                     *[one(kind) for _ in range(repeats)])
+        for kind in pattern
+    )
+    return {"layers": states, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_state_axes(cfg: ModelConfig) -> dict:
+    pattern, _ = _pattern(cfg)
+
+    def one(kind: BlockKind):
+        if kind == BlockKind.ATTENTION:
+            ca = attn_mod.cache_axes()
+            return {"k": ("layers",) + ca, "v": ("layers",) + ca}
+        if kind == BlockKind.MAMBA:
+            base = ssm_mod.mamba_state_axes()
+        elif kind == BlockKind.MLSTM:
+            base = xlstm_mod.mlstm_state_axes()
+        else:
+            base = xlstm_mod.slstm_state_axes()
+        return {k: ("layers",) + v for k, v in base.items()}
+
+    return {"layers": tuple(one(k) for k in pattern),
+            "pos": ("batch",)}
+
+
+def _prefill_block(kind: BlockKind, layer_params: Params, state, h,
+                   positions, cfg: ModelConfig, q_chunk: int,
+                   ssm_chunk: int):
+    normed = rmsnorm(layer_params["norm1"], h, cfg.norm_eps)
+    if kind == BlockKind.ATTENTION:
+        out, (k, v) = attn_mod.prefill_attention(
+            layer_params["block"], (state["k"], state["v"]), normed,
+            positions, cfg, q_chunk=q_chunk)
+        new_state = {"k": k, "v": v}
+    elif kind == BlockKind.MAMBA:
+        out, new_state = ssm_mod.mamba(layer_params["block"], normed, cfg,
+                                       chunk=ssm_chunk, return_state=True)
+    elif kind == BlockKind.MLSTM:
+        out, new_state = xlstm_mod.mlstm(layer_params["block"], normed, cfg,
+                                         return_state=True)
+    else:
+        out, new_state = xlstm_mod.slstm(layer_params["block"], normed, cfg,
+                                         return_state=True)
+    h = h + out
+    if "ffn" in layer_params:
+        normed = rmsnorm(layer_params["norm2"], h, cfg.norm_eps)
+        if "router" in layer_params["ffn"]:
+            out, _ = moe_mod.moe(layer_params["ffn"], normed, cfg)
+        else:
+            out = mlp(layer_params["ffn"], normed)
+        h = h + out
+    return h, new_state
+
+
+def prefill_step(params: Params, state: dict, inputs: dict,
+                 cfg: ModelConfig, q_chunk: int = 1024,
+                 ssm_chunk: int = 128) -> tuple[jax.Array, dict]:
+    """Process full prompts, populate per-layer states, return last-position
+    logits. inputs["tokens"]: (B, S); all prompts occupy positions [0, S)."""
+    pattern, repeats = _pattern(cfg)
+    h = _frontend_embed(params, inputs, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def layer_group(h, xs):
+        group_params, group_state = xs
+        new_states = []
+        for p, kind in enumerate(pattern):
+            h, ns = _prefill_block(kind, group_params[p], group_state[p], h,
+                                   positions, cfg, q_chunk, ssm_chunk)
+            new_states.append(ns)
+        return h, tuple(new_states)
+
+    h, new_layer_states = jax.lax.scan(
+        layer_group, h, (params["blocks"], state["layers"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, -1:], cfg.vocab_size)
+    return logits.astype(jnp.float32), {
+        "layers": new_layer_states,
+        "pos": jnp.full((b,), s, jnp.int32),
+    }
+
+
+def _decode_block(kind: BlockKind, layer_params: Params, state, h, positions,
+                  cfg: ModelConfig):
+    normed = rmsnorm(layer_params["norm1"], h, cfg.norm_eps)
+    if kind == BlockKind.ATTENTION:
+        out, (k, v) = attn_mod.decode_attention(
+            layer_params["block"], (state["k"], state["v"]), normed,
+            positions, cfg)
+        new_state = {"k": k, "v": v}
+    elif kind == BlockKind.MAMBA:
+        out, new_state = ssm_mod.mamba_step(layer_params["block"], state,
+                                            normed, cfg)
+    elif kind == BlockKind.MLSTM:
+        out, new_state = xlstm_mod.mlstm_step(layer_params["block"], state,
+                                              normed, cfg)
+    else:
+        out, new_state = xlstm_mod.slstm_step(layer_params["block"], state,
+                                              normed, cfg)
+    h = h + out
+    if "ffn" in layer_params:
+        normed = rmsnorm(layer_params["norm2"], h, cfg.norm_eps)
+        if isinstance(layer_params["ffn"], dict) \
+                and "router" in layer_params["ffn"]:
+            out, _ = moe_mod.moe(layer_params["ffn"], normed, cfg)
+        else:
+            out = mlp(layer_params["ffn"], normed)
+        h = h + out
+    return h, new_state
+
+
+def decode_step(params: Params, state: dict, tokens: jax.Array,
+                cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One token for every sequence. tokens: (B, 1) -> logits (B, 1, V)."""
+    pattern, repeats = _pattern(cfg)
+    h = embed(params["embed"], tokens)
+    positions = state["pos"]
+
+    def layer_group(h, xs):
+        group_params, group_state = xs
+        new_states = []
+        for p, kind in enumerate(pattern):
+            h, ns = _decode_block(kind, group_params[p], group_state[p], h,
+                                  positions, cfg)
+            new_states.append(ns)
+        return h, tuple(new_states)
+
+    h, new_layer_states = jax.lax.scan(
+        layer_group, h, (params["blocks"], state["layers"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg.vocab_size).astype(jnp.float32)
+    return logits, {"layers": new_layer_states, "pos": positions + 1}

@@ -1,0 +1,188 @@
+"""Mamba (selective SSM) block — chunked associative scan, TP over d_inner.
+
+Training/prefill uses a chunked parallel scan: ``lax.scan`` over sequence
+chunks carrying the SSM state, with ``lax.associative_scan`` inside each
+chunk. This bounds the materialized (B, chunk, d_inner, N) tensor — the TPU
+adaptation of Mamba's fused-SRAM-scan GPU kernel (we tile for VMEM instead).
+Decode is the O(1)-per-token recurrence, which is what makes the hybrid archs
+eligible for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, SSMConfig
+from repro.models.layers import _init
+from repro.parallel.sharding import logical_shard
+
+Params = dict
+Axes = dict
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    ssm = cfg.ssm or SSMConfig()
+    d_in = ssm.expand * cfg.d_model
+    dt_rank = ssm.dt_rank or -(-cfg.d_model // 16)
+    return d_in, ssm.d_state, ssm.d_conv, dt_rank
+
+
+def init_mamba(cfg: ModelConfig, key) -> tuple[Params, Axes]:
+    d = cfg.d_model
+    d_in, n, d_conv, dt_rank = _dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (d_in, 1))
+    params: Params = {
+        "in_proj": _init(keys[0], (d, 2 * d_in), d ** -0.5, dtype),
+        "conv_w": _init(keys[1], (d_conv, d_in), d_conv ** -0.5, dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": _init(keys[2], (d_in, dt_rank + 2 * n), d_in ** -0.5, dtype),
+        "dt_proj": _init(keys[3], (dt_rank, d_in), dt_rank ** -0.5, dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(keys[4], (d_in,)) * 0.1, 1e-3))
+        ).astype(dtype),
+        "a_log": jnp.log(a_init).astype(jnp.float32),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _init(keys[5], (d_in, d), d_in ** -0.5, dtype),
+    }
+    axes: Axes = {
+        "in_proj": ("w_embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", None),
+        "dt_proj": (None, "inner"),
+        "dt_bias": ("inner",),
+        "a_log": ("inner", None),
+        "d_skip": ("inner",),
+        "out_proj": ("inner", "w_embed"),
+    }
+    return params, axes
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv along seq. x: (B,S,Din), w: (K,Din).
+
+    Returns (y, new_state) where state holds the trailing K-1 inputs.
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xpad = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        xpad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    ) + b
+    new_state = xpad[:, -(k - 1):, :] if k > 1 else state
+    return y, new_state
+
+
+def _ssm_inputs(params: Params, u: jax.Array, cfg: ModelConfig):
+    """Selective parameters for each position. u: (B, S, Din)."""
+    _, n, _, dt_rank = _dims(cfg)
+    proj = jnp.einsum("bsd,dk->bsk", u, params["x_proj"])
+    dt, b_ssm, c_ssm = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt, params["dt_proj"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"])                       # (Din, N)
+    a_bar = jnp.exp(dt[..., None] * a[None, None])      # (B,S,Din,N)
+    bx = (dt * u.astype(jnp.float32))[..., None] \
+        * b_ssm.astype(jnp.float32)[..., None, :]       # (B,S,Din,N)
+    return a_bar, bx, c_ssm.astype(jnp.float32)
+
+
+def _scan_chunk(h0: jax.Array, a_bar: jax.Array, bx: jax.Array):
+    """Associative scan within one chunk. h0: (B,Din,N); a/bx: (B,C,Din,N)."""
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    h = b_cum + a_cum * h0[:, None]
+    return h, h[:, -1]
+
+
+def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
+          chunk: int = 128, return_state: bool = False):
+    """Train/prefill forward. x: (B, S, D) -> (B, S, D) [, final state]."""
+    b, s, _ = x.shape
+    d_in, n, _, _ = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xz = logical_shard(xz, "batch", "seq", "inner")
+    u, z = jnp.split(xz, 2, axis=-1)
+    u_raw = u
+    u, conv_state = _causal_conv(u, params["conv_w"], params["conv_b"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+
+    a_bar, bx, c_ssm = _ssm_inputs(params, u, cfg)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def step(h, inputs):
+        a_c, bx_c, c_c, u_c = inputs
+        h_all, h_last = _scan_chunk(h, a_c, bx_c)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_all, c_c)
+        y_c = y_c + params["d_skip"] * u_c.astype(jnp.float32)
+        return h_last, y_c
+
+    def split(t):  # (B,S,...) -> (nc, B, chunk, ...)
+        return jnp.moveaxis(
+            t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    h_last, y_chunks = jax.lax.scan(
+        step, h0, (split(a_bar), split(bx), split(c_ssm), split(u)))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(b, s, d_in)
+
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = logical_shard(y, "batch", "seq", "inner")
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    out = logical_shard(out, "batch", "seq", "embed")
+    if return_state:
+        k = params["conv_w"].shape[0]
+        tail = u_raw[:, -(k - 1):, :] if k > 1 else conv_state
+        return out, {"h": h_last, "conv": tail.astype(conv_state.dtype)}
+    return out
+
+
+# -- Decode --------------------------------------------------------------------
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> dict:
+    d_in, n, d_conv, _ = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, d_in, n), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, d_in), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba_state_axes() -> dict:
+    return {"h": ("batch", "inner", "state"),
+            "conv": ("batch", None, "inner")}
+
+
+def mamba_step(params: Params, state: dict, x: jax.Array,
+               cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One decode step. x: (B, 1, D)."""
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _causal_conv(u, params["conv_w"], params["conv_b"],
+                                 state["conv"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    a_bar, bx, c_ssm = _ssm_inputs(params, u, cfg)
+    h = a_bar[:, 0] * state["h"] + bx[:, 0]
+    h = logical_shard(h, "batch", "inner", "state")
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0])
+    y = y + params["d_skip"] * u[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) \
+        * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    out = logical_shard(out, "batch", "seq", "embed")
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,10 @@
+"""Distribution layer: logical-axis sharding, strategy decision nodes."""
+
+from repro.parallel.sharding import (  # noqa: F401
+    ShardingRules,
+    current_rules,
+    logical_shard,
+    make_param_sharding,
+    pad_to_multiple,
+    use_rules,
+)

@@ -1,0 +1,138 @@
+"""Logical-axis sharding for Proteus-JAX.
+
+Model code annotates tensors with *logical* axis names (``"batch"``,
+``"seq"``, ``"embed"``, ``"heads"``, ``"expert"``, ...). A ``ShardingRules``
+mapping — produced by the control-plane decision nodes in
+``repro.parallel.strategies`` — binds logical names to physical mesh axes.
+Inside an active rules context, ``logical_shard`` applies
+``jax.lax.with_sharding_constraint``; outside (unit tests, CPU smoke runs)
+it is a no-op, so model code never depends on a mesh being present.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_RULES: contextvars.ContextVar["ShardingRules | None"] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+class ShardingRules:
+    """Binds logical axis names to mesh axes (or None = replicated)."""
+
+    def __init__(self, mesh: Mesh | None,
+                 rules: Mapping[str, Any]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def spec(self, *logical_axes: str | None) -> P:
+        parts = []
+        used: set[str] = set()
+        for ax in logical_axes:
+            if ax is None:
+                parts.append(None)
+                continue
+            phys = self.rules.get(ax)
+            if phys is None:
+                parts.append(None)
+            elif isinstance(phys, (tuple, list)):
+                fresh = tuple(p for p in phys if p not in used)
+                used.update(fresh)
+                parts.append(fresh if fresh else None)
+            else:
+                if phys in used:
+                    parts.append(None)
+                else:
+                    used.add(phys)
+                    parts.append(phys)
+        return P(*parts)
+
+    def sharding(self, *logical_axes: str | None) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+    def axis_size(self, logical: str) -> int:
+        """Number of shards a logical axis is split into."""
+        if self.mesh is None:
+            return 1
+        phys = self.rules.get(logical)
+        if phys is None:
+            return 1
+        if isinstance(phys, (tuple, list)):
+            return int(np.prod([self.mesh.shape[p] for p in phys]))
+        return int(self.mesh.shape[phys])
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    token = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules() -> ShardingRules | None:
+    return _RULES.get()
+
+
+def logical_shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o rules)."""
+    rules = _RULES.get()
+    if rules is None or rules.mesh is None:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(
+            f"rank mismatch: {x.shape} vs logical axes {logical_axes}"
+        )
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(*logical_axes))
+    )
+
+
+def pad_to_multiple(n: int, multiple: int) -> int:
+    return int(math.ceil(n / multiple) * multiple)
+
+
+def divisible(n: int, logical: str) -> bool:
+    rules = _RULES.get()
+    if rules is None:
+        return True
+    return n % rules.axis_size(logical) == 0
+
+
+# Canonical logical-axis vocabulary used across the code base -----------------
+#
+#   batch      global batch dim (DP: data (+pod))
+#   seq        sequence dim (SP: sharded over model between blocks when the
+#              seq_tp strategy is active)
+#   embed      d_model / residual stream (never sharded)
+#   heads      attention query heads (TP under head_tp)
+#   kv_heads   attention kv heads (TP when divisible, else replicated)
+#   qkv        per-head feature dim (never sharded)
+#   mlp        FFN hidden dim (TP column/row)
+#   expert     MoE expert dim (EP)
+#   cap        MoE capacity dim
+#   vocab      vocabulary dim (TP)
+#   inner      SSM / xLSTM inner feature dim (TP)
+#   state      SSM state dim (never sharded)
+#   stage      pipeline stage (PP over pod when packing is selected)
+
+
+def make_param_sharding(rules: ShardingRules, logical_tree) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: rules.sharding(*axes),
+        logical_tree,
+        is_leaf=lambda v: isinstance(v, tuple)
+        and all(isinstance(a, (str, type(None))) for a in v),
+    )

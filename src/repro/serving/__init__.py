@@ -1,0 +1,7 @@
+"""Serving substrate: continuous batching engine + batching decision node."""
+
+from repro.serving.engine import (  # noqa: F401
+    Request,
+    ServingEngine,
+    batching_decision_node,
+)

@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, losses, train-step builder."""
+
+from repro.training.optimizer import (  # noqa: F401
+    apply_updates,
+    init_opt_state,
+    lr_schedule,
+    opt_state_axes,
+)
+from repro.training.losses import chunked_cross_entropy  # noqa: F401
+from repro.training.train_step import (  # noqa: F401
+    init_train_state,
+    make_eval_step,
+    make_train_step,
+)

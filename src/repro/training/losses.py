@@ -1,0 +1,57 @@
+"""Sequence-chunked cross-entropy fused with the unembedding.
+
+At (B=256, S=4096, V=152k) the fp32 logits tensor is ~0.6 TB — it must never
+materialize. We ``lax.map`` over sequence chunks, computing (chunk) logits,
+log-sum-exp and the label term inside the chunk; peak memory is
+O(B * chunk * V / tp).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.parallel.sharding import logical_shard
+
+
+def chunked_cross_entropy(embed_params: dict, h: jax.Array,
+                          labels: jax.Array, cfg: ModelConfig,
+                          chunk: int = 512) -> tuple[jax.Array, jax.Array]:
+    """h: (B, S, D) final hidden states; labels: (B, S) int32 (-1 = masked).
+
+    Returns (mean_loss, token_count). Padded vocab columns never receive
+    probability mass for real labels (labels < true vocab by construction),
+    but they do enter the partition function; we mask them to -inf.
+    """
+    b, s, d = h.shape
+    table = embed_params.get("unembed")
+    if table is None:
+        table = embed_params["table"].T
+    vpad = table.shape[-1]
+    vocab_mask = (jnp.arange(vpad) < cfg.vocab_size)
+
+    chunk = min(chunk, s)
+    while s % chunk:      # largest divisor of s not exceeding the request
+        chunk -= 1        # (VLM text spans like 3840 are not 512-aligned)
+    nc = s // chunk
+
+    def one(args):
+        hc, lc = args                       # (B, C, D), (B, C)
+        logits = jnp.einsum("bcd,dv->bcv", hc, table).astype(jnp.float32)
+        logits = logical_shard(logits, "batch", None, "vocab")
+        logits = jnp.where(vocab_mask[None, None], logits, -1e9)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        label_logit = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - label_logit) * mask), jnp.sum(mask)
+
+    if nc == 1:
+        total, count = one((h, labels))
+    else:
+        h_c = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+        l_c = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+        sums, counts = jax.lax.map(one, (h_c, l_c))
+        total, count = jnp.sum(sums), jnp.sum(counts)
+    return total / jnp.maximum(count, 1.0), count

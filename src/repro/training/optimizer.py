@@ -1,0 +1,92 @@
+"""AdamW with fp32 master weights, global-norm clipping, warmup+cosine LR.
+
+Functional, dependency-free (no optax): ``init_opt_state`` mirrors the param
+tree (so it inherits the params' shardings under pjit), ``apply_updates``
+returns (new_params, new_state). Optimizer math runs in fp32 regardless of
+param dtype; bf16 params are re-cast from the fp32 master copy each step.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import OptimizerConfig
+
+
+def init_opt_state(params: Any) -> dict:
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def opt_state_axes(param_axes: Any) -> dict:
+    """Logical axes for the optimizer state (same sharding as params)."""
+    is_axes = lambda v: isinstance(v, tuple) and all(
+        isinstance(a, (str, type(None))) for a in v)
+    copy = lambda: jax.tree.map(lambda a: a, param_axes, is_leaf=is_axes)
+    return {"step": (), "master": copy(), "m": copy(), "v": copy()}
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array,
+                total_steps: int = 10000) -> jax.Array:
+    step_f = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step_f / max(1, cfg.warmup_steps))
+    progress = jnp.clip((step_f - cfg.warmup_steps)
+                        / max(1, total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return cfg.lr * warm * (0.1 + 0.9 * cosine)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(params: Any, grads: Any, state: dict,
+                  cfg: OptimizerConfig, total_steps: int = 10000,
+                  ) -> tuple[Any, dict, dict]:
+    """One AdamW step. grads may be bf16; math is fp32."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step, total_steps)
+
+    gnorm = global_norm(grads)
+    scale = jnp.where(gnorm > cfg.grad_clip, cfg.grad_clip / (gnorm + 1e-9),
+                      1.0)
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(master, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if master.ndim >= 2 else 0.0
+        master_new = master - lr * (update + wd * master)
+        return master_new, m_new, v_new
+
+    flat_master, treedef = jax.tree.flatten(state["master"])
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(ma, g, m, v)
+           for ma, g, m, v in zip(flat_master, flat_g, flat_m, flat_v)]
+    master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    v = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    new_params = jax.tree.map(lambda p, ma: ma.astype(p.dtype), params,
+                              master)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"step": step, "master": master, "m": m, "v": v}, \
+        metrics

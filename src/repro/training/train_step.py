@@ -1,0 +1,112 @@
+"""Train-step builder: microbatch gradient accumulation + remat + AdamW.
+
+``make_train_step(cfg, shape, opt_cfg, pc)`` returns a pure function
+``train_step(state, batch) -> (state, metrics)`` suitable for ``jax.jit``
+with in/out shardings derived from the active ShardingRules. The microbatch
+count is the *scale* element of the control-plane decision tuple (paper:
+"scale ∝ data size"): global batch is split into ``pc.microbatches`` slices
+scanned sequentially, bounding activation memory.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import (
+    Frontend,
+    ModelConfig,
+    OptimizerConfig,
+    ParallelConfig,
+    ShapeConfig,
+)
+from repro.models.lm import forward_hidden
+from repro.parallel.sharding import logical_shard
+from repro.training.losses import chunked_cross_entropy
+from repro.training.optimizer import apply_updates, init_opt_state
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def init_train_state(cfg: ModelConfig, params: Any) -> dict:
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def _loss_fn(params, batch, cfg: ModelConfig, pc: ParallelConfig,
+             q_chunk: int, ssm_chunk: int):
+    h, aux = forward_hidden(params, batch, cfg, remat=pc.remat,
+                            q_chunk=q_chunk, ssm_chunk=ssm_chunk)
+    if cfg.frontend == Frontend.VISION_STUB.value:
+        h = h[:, cfg.stub_patches:]        # loss over text positions only
+    ce, count = chunked_cross_entropy(params["embed"], h, batch["labels"],
+                                      cfg)
+    loss = ce + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": count}
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                    opt_cfg: OptimizerConfig, pc: ParallelConfig,
+                    total_steps: int = 10000, q_chunk: int = 1024,
+                    ssm_chunk: int = 128, regather=None):
+    """``regather`` (optional, with pc.zero2): wraps the loss so weights are
+    re-constrained to a non-FSDP sharding inside differentiation — the
+    constraint's transpose reduce-scatters the grads. NOTE: persisting
+    gathered weights across the microbatch scan costs 2·N/tp bytes of HBM,
+    which rules it out for the 72B cell on 16 GB chips (see EXPERIMENTS.md
+    §Perf); it is a win on high-HBM parts, hence kept as an option."""
+    mb = max(1, pc.microbatches)
+
+    base_loss = partial(_loss_fn, cfg=cfg, pc=pc, q_chunk=q_chunk,
+                        ssm_chunk=ssm_chunk)
+    if regather is not None and pc.zero2:
+        def loss_fn(params, mbatch):
+            return base_loss(regather(params), mbatch)
+    else:
+        loss_fn = base_loss
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+
+        if mb == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def slice_mb(t):
+                b = t.shape[0]
+                return jnp.moveaxis(
+                    t.reshape(mb, b // mb, *t.shape[1:]), 0, 0)
+
+            batch_mb = jax.tree.map(slice_mb, batch)
+
+            def acc(carry, mb_batch):
+                g_acc, loss_acc = carry
+                (loss, metrics), grads = grad_fn(params, mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / mb, g_acc, grads)
+                return (g_acc, loss_acc + loss / mb), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), batch_mb)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, state["opt"], opt_cfg, total_steps)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, pc: ParallelConfig,
+                   q_chunk: int = 1024, ssm_chunk: int = 128):
+    def eval_step(params, batch):
+        loss, metrics = _loss_fn(params, batch, cfg, pc, q_chunk, ssm_chunk)
+        return metrics
+    return eval_step

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the real (1-device) CPU platform; the
+# 512-device override belongs exclusively to repro.launch.dryrun.
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,227 @@
+"""Analytics case study: operators vs numpy oracle, decision nodes,
+simulator invariants, and paper-trend assertions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analytics import (
+    QueryStrategy,
+    Table,
+    execute_query_jax,
+    make_cluster,
+    plan_query_tasks,
+    reference_query_numpy,
+    synth_table,
+)
+from repro.analytics import operators as ops
+from repro.analytics.decisions import (
+    T1,
+    T2,
+    cost_model_join_decision,
+    join_decision,
+    scheduling_decision,
+)
+from repro.analytics.simulator import SimTask
+from repro.analytics.table import distribute, phantom
+from repro.core.controllers import GlobalController, PrivateController
+from repro.core.decisions import DataDist, DecisionContext
+
+
+def make_tables(rows=2048, keyspace=1024, dim_rows=256, seed=0):
+    fact = synth_table("f", rows, keyspace, seed=seed)
+    dimc = synth_table("d", dim_rows, keyspace, seed=seed + 1,
+                       unique_keys=True)
+    dim = Table({**dimc.columns,
+                 "cat": jnp.arange(dim_rows, dtype=jnp.int32) % 64})
+    return fact, dim
+
+
+# -- operator correctness -------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["hash", "merge"])
+def test_join_methods_agree_with_oracle(method):
+    fact, dim = make_tables()
+    got = np.asarray(execute_query_jax(fact, dim, method=method))
+    ref = reference_query_numpy(fact, dim)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-3)
+
+
+def test_joins_agree_with_each_other():
+    fact, dim = make_tables(seed=7)
+    a = np.asarray(execute_query_jax(fact, dim, method="hash"))
+    b = np.asarray(execute_query_jax(fact, dim, method="merge"))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), rows=st.sampled_from([256, 1024]),
+       dim_rows=st.sampled_from([32, 128]))
+def test_hash_join_property(seed, rows, dim_rows):
+    """Property: every probe row matching a build key is found with the
+    right index; non-matching rows are not found."""
+    rng = np.random.default_rng(seed)
+    build = jnp.asarray(rng.permutation(10 * dim_rows)[:dim_rows],
+                        jnp.int32)
+    probe = jnp.asarray(rng.integers(0, 10 * dim_rows, rows), jnp.int32)
+    slots = ops.build_hash_table(build)
+    idx, found = ops.hash_join_indices(probe, build, slots)
+    build_np, probe_np = np.asarray(build), np.asarray(probe)
+    lookup = {int(k): i for i, k in enumerate(build_np)}
+    for j in range(rows):
+        if int(probe_np[j]) in lookup:
+            assert bool(found[j]), j
+            assert int(idx[j]) == lookup[int(probe_np[j])]
+        else:
+            assert not bool(found[j])
+
+
+def test_partition_permutation_property():
+    keys = jax.random.randint(jax.random.PRNGKey(0), (4096,), 0, 10_000,
+                              jnp.int32)
+    order, counts, pids = ops.partition_permutation(keys, 16)
+    assert int(jnp.sum(counts)) == 4096
+    sorted_pids = np.asarray(pids)[np.asarray(order)]
+    assert (np.diff(sorted_pids) >= 0).all()     # grouped
+    assert sorted(np.asarray(order).tolist()) == list(range(4096))
+
+
+def test_groupby_sum_matches_numpy():
+    gids = jax.random.randint(jax.random.PRNGKey(1), (512,), 0, 8, jnp.int32)
+    vals = jax.random.normal(jax.random.PRNGKey(2), (512,))
+    got = np.asarray(ops.groupby_sum(gids, vals, 8))
+    ref = np.zeros(8)
+    np.add.at(ref, np.asarray(gids), np.asarray(vals))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+# -- decision nodes (paper Fig. 6) ----------------------------------------------
+
+
+def _ctx(size_a, size_b, nodes_a, nodes_b, cluster=12, slots=8):
+    gc = GlobalController({n: slots for n in range(cluster)})
+    return DecisionContext(
+        data_dist={
+            "A": DataDist("A", {n: size_a // len(nodes_a) for n in nodes_a}),
+            "B": DataDist("B", {n: size_b // len(nodes_b) for n in nodes_b}),
+        },
+        node_status=gc.node_status())
+
+
+def test_fig6_small_dim_table_picks_hash():
+    ctx = _ctx(400 << 20, 10 << 20, range(12), range(2))
+    d = join_decision(ctx)
+    assert d.func == "hash_join"
+    assert d.schedule.policy == "packing"
+
+
+def test_fig6_comparable_tables_large_cluster_picks_merge():
+    ctx = _ctx(400 << 20, 100 << 20, range(12), range(2))
+    assert (400 / 100) < T1 and 12 > T2
+    d = join_decision(ctx)
+    assert d.func == "merge_join"
+    assert d.schedule.policy == "round-robin"
+
+
+def test_cost_model_broadcast_grows_with_cluster():
+    """Fig. 4(c): hash join estimate grows with cluster size; merge's
+    doesn't — so the decision flips on large clusters. Hermetic: fixed
+    operator rates injected through the profiling feedback channel."""
+    rates = {"merge_join": 60e6, "hash_build": 500e6, "hash_probe": 300e6,
+             "scan": 2e9, "sort": 120e6, "agg": 2e9}
+    ctx_small = _ctx(400 << 20, 80 << 20, range(4), range(2), cluster=4)
+    ctx_small.profile = {"rates": rates}
+    ctx_large = _ctx(400 << 20, 80 << 20, range(20), range(2), cluster=20)
+    ctx_large.profile = {"rates": rates}
+    small = cost_model_join_decision(ctx_small)
+    large = cost_model_join_decision(ctx_large)
+    assert small.func == "hash_join"
+    assert large.func == "merge_join"
+
+
+def test_scheduling_node_packs_under_skew():
+    gc = GlobalController({n: 8 for n in range(8)})
+    uniform = DecisionContext(
+        data_dist={"A": DataDist("A", {n: 100 for n in range(8)},
+                                 skew=1.0)},
+        node_status=gc.node_status())
+    skewed = DecisionContext(
+        data_dist={"A": DataDist("A", {0: 700, 1: 50, 2: 50}, skew=4.0)},
+        node_status=gc.node_status())
+    assert scheduling_decision(uniform).schedule.policy == "round-robin"
+    assert scheduling_decision(skewed).schedule.policy == "packing"
+
+
+# -- simulator ----------------------------------------------------------------
+
+
+def test_simulator_respects_dependencies_and_slots():
+    gc, sim = make_cluster(2, slots=1)
+    sim.submit(SimTask("a", "app", 1.0, node=0))
+    sim.submit(SimTask("b", "app", 1.0, node=0, deps=("a",)))
+    out = sim.run()
+    assert sim.tasks["b"].started >= sim.tasks["a"].finished
+    assert out["completion"]["app"] == pytest.approx(2.0, rel=1e-6)
+
+
+def test_simulator_transfers_serialize_on_nic():
+    gc, sim = make_cluster(3)
+    # two transfers from the same source must serialize
+    sim.submit(SimTask("x", "app", 0.0, node=1,
+                       transfers={0: int(1.25e9)}))   # 1s at 1.25 GB/s
+    sim.submit(SimTask("y", "app", 0.0, node=2,
+                       transfers={0: int(1.25e9)}))
+    out = sim.run()
+    assert out["completion"]["app"] == pytest.approx(2.0, rel=0.01)
+
+
+def test_simulator_allocation_rate_bounds():
+    gc, sim = make_cluster(2, slots=2)
+    for i in range(8):
+        sim.submit(SimTask(f"t{i}", "app", 0.5))
+    out = sim.run()
+    rate = out["allocation"].allocation_rate()
+    assert 0.0 < rate <= 1.0
+
+
+def test_background_tasks_backfill_idle_slots():
+    """Fig. 8: low-priority tasks run in the gaps without delaying the
+    high-priority app beyond its solo completion time."""
+    def build(with_bg):
+        gc, sim = make_cluster(2, slots=2)
+        sim.submit(SimTask("hi/1", "query", 1.0, node=0, priority=10))
+        sim.submit(SimTask("hi/2", "query", 1.0, node=0, priority=10,
+                           deps=("hi/1",)))
+        if with_bg:
+            for i in range(6):
+                sim.submit(SimTask(f"bg/{i}", "bg", 0.5, priority=0))
+        return sim.run()
+
+    solo = build(False)
+    shared = build(True)
+    assert shared["completion"]["query"] <= solo["completion"]["query"] + 1e-6
+    assert shared["allocation"].allocation_rate() \
+        > solo["allocation"].allocation_rate()
+
+
+# -- end-to-end strategy comparison (paper Fig. 7 trend) -------------------------
+
+
+def test_dynamic_strategy_never_worst():
+    results = {}
+    for strat in ("static_merge", "static_hash", "dynamic"):
+        times = []
+        for gb in (2, 6):
+            gc, sim = make_cluster(6)
+            pc = PrivateController("query", gc, priority=10)
+            f = phantom("A", int(gb * 0.9 * 2 ** 30), range(6))
+            d = phantom("B", int(gb * 0.05 * 2 ** 30), range(2))
+            plan_query_tasks(sim, pc, f, d, QueryStrategy(strat))
+            times.append(sim.run()["completion"]["query"])
+        results[strat] = times
+    for i in range(2):
+        worst = max(r[i] for r in results.values())
+        assert results["dynamic"][i] < worst * 1.001

@@ -1,0 +1,85 @@
+"""Launcher-level coverage: every (arch x shape) cell plans cleanly on both
+production mesh shapes (no device construction needed), and the CLI train
+driver runs end-to-end on CPU."""
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.common import applicable_shapes
+from repro.core.config import SHAPES
+from repro.parallel.strategies import make_rules, plan_cell
+
+
+class FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.devices = np.empty(tuple(shape.values()), dtype=object)
+
+
+MESHES = {
+    "single": FakeMesh({"data": 16, "model": 16}),
+    "multi": FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_name", ["single", "multi"])
+@pytest.mark.parametrize("profile", ["optimized", "baseline"])
+def test_plan_all_cells(arch, mesh_name, profile):
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_name]
+    for shape_name in applicable_shapes(cfg):
+        shape = SHAPES[shape_name]
+        pc = plan_cell(cfg, shape, mesh, profile=profile)
+        assert pc.attn_strategy != "auto"
+        assert pc.moe_strategy != "auto"
+        assert pc.layout in ("tp", "pure_dp")
+        assert pc.microbatches >= 1
+        if profile == "baseline":
+            assert pc.layout == "tp"
+            assert pc.moe_strategy != "shard_map_a2a"
+            assert not pc.causal_skip
+        rules = make_rules(mesh, cfg, shape, pc)
+        # every logical axis must resolve to a valid spec
+        spec = rules.spec("batch", "seq", "embed")
+        assert spec is not None
+        # divisibility of sharded batch
+        n_b = rules.axis_size("batch")
+        local = shape.global_batch // max(1, pc.microbatches) \
+            if shape.mode == "train" else shape.global_batch
+        if n_b > 1:
+            assert local % n_b == 0, (arch, shape_name, local, n_b)
+
+
+def test_big_models_not_pure_dp():
+    mesh = MESHES["single"]
+    for arch in ("qwen2-72b", "jamba-v0.1-52b"):
+        pc = plan_cell(get_config(arch), SHAPES["train_4k"], mesh)
+        assert pc.layout == "tp", arch
+
+
+def test_small_models_pure_dp():
+    mesh = MESHES["single"]
+    for arch in ("xlstm-1.3b", "granite-moe-1b-a400m", "llama3.2-3b"):
+        pc = plan_cell(get_config(arch), SHAPES["train_4k"], mesh)
+        assert pc.layout == "pure_dp", arch
+
+
+@pytest.mark.slow
+def test_train_cli_end_to_end(tmp_path):
+    from repro.launch.train import main
+
+    losses = main(["--arch", "llama3.2-3b", "--steps", "12", "--batch", "2",
+                   "--seq", "32", "--ckpt", str(tmp_path),
+                   "--log-every", "4", "--ckpt-every", "6"])
+    assert len(losses) >= 2
+
+
+@pytest.mark.slow
+def test_serve_cli_end_to_end():
+    from repro.launch.serve import main
+
+    done = main(["--arch", "llama3.2-3b", "--requests", "3",
+                 "--max-new", "2", "--max-batch", "2", "--max-seq", "48"])
+    assert len(done) == 3

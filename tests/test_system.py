@@ -1,0 +1,186 @@
+"""Control-plane behaviour tests: decision workflows + controllers."""
+
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ConflictError,
+    DataDist,
+    Decision,
+    DecisionContext,
+    DecisionNode,
+    DecisionWorkflow,
+    GlobalController,
+    PrivateController,
+    Schedule,
+    default_node,
+)
+
+
+def make_gc(nodes=4, slots=8):
+    return GlobalController({n: slots for n in range(nodes)})
+
+
+# -- Schedule placement ----------------------------------------------------------
+
+
+def test_round_robin_spreads():
+    sch = Schedule("round-robin", (0, 1, 2))
+    assert sch.place(6) == (0, 1, 2, 0, 1, 2)
+
+
+def test_packing_fills_nodes_first():
+    sch = Schedule("packing", (0, 1, 2), slots_per_node=2)
+    assert sch.place(5) == (0, 0, 1, 1, 2)
+
+
+def test_packing_overflow_stays_on_last_node():
+    sch = Schedule("packing", (0,), slots_per_node=2)
+    assert sch.place(4) == (0, 0, 0, 0)
+
+
+# -- GlobalController ---------------------------------------------------------
+
+
+def test_commit_and_release_restores_slots():
+    gc = make_gc()
+    claim = gc.commit("app", 0, [0, 0, 1])
+    assert gc.used == {0: 2, 1: 1, 2: 0, 3: 0}
+    gc.release(claim)
+    assert sum(gc.used.values()) == 0
+
+
+def test_oversubscription_rejected():
+    gc = make_gc(nodes=1, slots=2)
+    gc.commit("a", 5, [0, 0])
+    with pytest.raises(ConflictError):
+        gc.commit("b", 5, [0])          # equal priority: no preemption
+
+
+def test_priority_preemption_evicts_low():
+    gc = make_gc(nodes=1, slots=2)
+    low = gc.commit("bg", 0, [0, 0])
+    hi = gc.commit("query", 10, [0, 0])
+    assert hi.claim_id in gc.claims
+    assert low.claim_id not in gc.claims
+    assert len(gc.preemptions) == 1
+    assert gc.preemptions[0].victim.app == "bg"
+
+
+def test_preemption_does_not_evict_higher():
+    gc = make_gc(nodes=1, slots=2)
+    gc.commit("query", 10, [0, 0])
+    with pytest.raises(ConflictError):
+        gc.commit("bg", 0, [0])
+
+
+def test_node_status_view_is_consistent():
+    gc = make_gc()
+    gc.commit("a", 0, [1, 1, 2])
+    status = gc.node_status()
+    assert status.free_slots[1] == 6
+    assert status.free() == 4 * 8 - 3
+
+
+def test_concurrent_commits_never_oversubscribe():
+    gc = make_gc(nodes=2, slots=16)
+    errors = []
+
+    def worker(i):
+        try:
+            for _ in range(50):
+                c = gc.commit(f"app{i}", 0, [i % 2])
+                gc.release(c)
+        except ConflictError:
+            pass
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert all(0 <= gc.used[n] <= gc.total[n] for n in gc.total)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 6)),
+                min_size=1, max_size=40))
+def test_slot_accounting_invariant(ops):
+    """Property: used slots never exceed totals nor go negative."""
+    gc = make_gc(nodes=4, slots=4)
+    live = []
+    for node, count in ops:
+        try:
+            live.append(gc.commit("app", 0, [node] * count))
+        except ConflictError:
+            if live:
+                gc.release(live.pop())
+        assert all(0 <= gc.used[n] <= gc.total[n] for n in gc.total)
+    for c in live:
+        gc.release(c)
+    assert sum(gc.used.values()) == 0
+
+
+# -- Decision workflows ----------------------------------------------------------
+
+
+def test_default_node_uses_all_free_slots():
+    gc = make_gc(nodes=2, slots=4)
+    node = default_node("fallback")
+    d = node.decide(DecisionContext(node_status=gc.node_status()))
+    assert d.scale == 8
+    assert d.schedule.policy == "round-robin"
+
+
+def test_workflow_runs_in_order_with_feedback():
+    wf = DecisionWorkflow("q")
+    seen = []
+
+    def mk(name):
+        def fn(ctx):
+            seen.append((name, dict(ctx.profile)))
+            return Decision(name, 1, Schedule("round-robin", (0,)))
+        return DecisionNode(name, fn)
+
+    wf.add(mk("a")).add(mk("b"), depends_on=["a"])
+
+    def executor(name, decision, ctx):
+        return {"latency": 1.0}
+
+    decisions = wf.run(DecisionContext(), executor)
+    assert list(decisions) == ["a", "b"]
+    # stage b observed stage a's feedback (paper Fig. 5 step 4)
+    assert "a.latency" in seen[1][1]
+
+
+def test_workflow_rejects_unknown_dependency():
+    wf = DecisionWorkflow("q")
+    with pytest.raises(ValueError):
+        wf.add(default_node("x"), depends_on=["nope"])
+
+
+def test_decision_node_fallback_on_error():
+    def broken(ctx):
+        raise RuntimeError("custom logic bug")
+
+    node = DecisionNode(
+        "j", broken,
+        fallback=lambda ctx: Decision("default", 1,
+                                      Schedule("round-robin", (0,))))
+    d = node.decide(DecisionContext())
+    assert d.func == "default"
+
+
+def test_private_controller_enacts_decision():
+    gc = make_gc(nodes=2, slots=2)
+    pc = PrivateController("q", gc, priority=5)
+    pc.observe_data(DataDist("A", {0: 100, 1: 50}))
+    claim = pc.enact(Decision("f", 3, Schedule("round-robin", (0, 1))))
+    assert sum(claim.slots_per_node().values()) == 3
+    pc.release_all()
+    assert sum(gc.used.values()) == 0
