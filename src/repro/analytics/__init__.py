@@ -19,6 +19,9 @@ from repro.analytics.simulator import (  # noqa: F401
 from repro.analytics.query import (  # noqa: F401
     QueryStrategy,
     execute_query_jax,
+    execute_query_runtime,
     plan_query_tasks,
+    plan_runtime_stages,
     reference_query_numpy,
+    resolve_join_decision,
 )

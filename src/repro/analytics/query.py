@@ -12,12 +12,18 @@ volumes from the actual table sizes. The ``dynamic`` strategy additionally
 runs the paper's packing consolidation when the whole input fits one node.
 
 ``execute_query_jax`` runs the same logical plan for real on the in-process
-JAX data plane (used by correctness tests against a numpy oracle).
+JAX data plane (used by correctness tests against a numpy oracle), and
+``execute_query_runtime`` runs it on the serverless function runtime
+(``repro.runtime``): the decision tuple is materialized into real
+partitioned function invocations — scan, shuffle-by-hash or broadcast,
+per-partition hash/merge join, partial + final aggregation — over the
+ephemeral shuffle store, with slot claims through the global controller.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -27,7 +33,7 @@ from repro.analytics.decisions import ALPHA, join_decision_node
 from repro.analytics.simulator import ClusterSim, SimTask, calibrated_rates
 from repro.analytics.table import DistTable, Table
 from repro.core.controllers import GlobalController, PrivateController
-from repro.core.decisions import Decision, DecisionContext, Schedule
+from repro.core.decisions import DataDist, Decision, DecisionContext, Schedule
 
 ROW_BYTES = 8  # key(4) + packed values, matching calibration units
 
@@ -55,6 +61,22 @@ class QueryStrategy:
         return Decision(func, scale, Schedule("round-robin", nodes))
 
 
+def resolve_join_decision(strategy: QueryStrategy, ctx: DecisionContext,
+                          consolidate_threshold: int = 2 << 30,
+                          ) -> tuple[Decision, bool]:
+    """Run the strategy's decision node; returns (decision, consolidated).
+
+    Shared by the simulator planner and the runtime planner so both data
+    planes materialize the *same* decision tuple.
+    """
+    decision = strategy.join_method(ctx)
+    total_bytes = sum(d.size for d in ctx.data_dist.values())
+    consolidated = bool(decision.extra("consolidate", False)) or (
+        strategy.name == "dynamic_fig6"
+        and total_bytes <= consolidate_threshold)
+    return decision, consolidated
+
+
 def plan_query_tasks(sim: ClusterSim, pc: PrivateController,
                      fact: DistTable, dim: DistTable,
                      strategy: QueryStrategy, app: str = "query",
@@ -73,11 +95,8 @@ def plan_query_tasks(sim: ClusterSim, pc: PrivateController,
         data_dist={"A": dist_f, "B": dist_d},
         node_status=status)
 
-    decision = strategy.join_method(ctx)
-    total_bytes = dist_f.size + dist_d.size
-    consolidated = bool(decision.extra("consolidate", False)) or (
-        strategy.name == "dynamic_fig6"
-        and total_bytes <= consolidate_threshold)
+    decision, consolidated = resolve_join_decision(
+        strategy, ctx, consolidate_threshold)
 
     # ---- Phase 1: map over fact partitions (scan+filter+project) ----------
     map1 = []
@@ -169,6 +188,158 @@ def plan_query_tasks(sim: ClusterSim, pc: PrivateController,
                        dist_f.size / 16 / rates["agg"], node=agg_node,
                        priority=10, deps=tuple(join_names),
                        transfers=pulls))
+
+
+# -- runtime execution: decisions -> real partitioned invocations ----------------
+
+
+def plan_runtime_stages(app: str, fact_layout: Sequence[tuple[int, int]],
+                        dim_layout: Sequence[tuple[int, int]],
+                        decision: Decision, dist_f: DataDist,
+                        consolidated: bool = False, num_groups: int = 64,
+                        priority: int = 0) -> "list[RuntimeStage]":
+    """Materialize a decision tuple into the physical stage DAG.
+
+    The layouts are ``[(partition, home_node), ...]`` as returned by
+    ``Runtime.seed``. The decision's ``func`` picks the exchange pattern
+    (merge_join => hash-shuffle both sides; hash_join => broadcast the dim
+    side), its ``scale`` sets the join fan-out and its ``schedule`` places
+    the join instances — scans stay data-local regardless (the decision
+    workflow governs the *join* group, as in the paper's Fig. 6).
+    """
+    from repro.runtime.executor import RuntimeStage
+    from repro.runtime.invoker import Invocation
+
+    all_nodes = tuple(sorted({n for _, n in fact_layout} |
+                             {n for _, n in dim_layout}))
+    n_join = max(1, min(int(decision.scale), 64))
+    join_nodes = decision.schedule.place(n_join) or \
+        tuple(all_nodes[i % len(all_nodes)] for i in range(n_join))
+    func = decision.func
+    if consolidated:
+        # pack the whole pipeline onto the data-heaviest node: the only
+        # cross-node traffic left is the initial partition pulls
+        target = max(dist_f.bytes_per_node, key=dist_f.bytes_per_node.get) \
+            if dist_f.bytes_per_node else all_nodes[0]
+        join_nodes = (target,) * n_join
+        func = "hash_join"
+
+    def inv(stage, i, fn, node, params):
+        return Invocation(f"{app}/{stage}/{i}", app, stage, i, fn, node,
+                          priority=priority, params=params)
+
+    stages = [
+        RuntimeStage("scan_fact", [
+            inv("scan_fact", i, "scan_filter", node,
+                {"src": "input/fact", "dst": "scan_fact", "partition": i,
+                 "filter_col": "v0", "filter_gt": 0.0})
+            for i, node in fact_layout]),
+        RuntimeStage("scan_dim", [
+            inv("scan_dim", j, "scan_filter", node,
+                {"src": "input/dim", "dst": "scan_dim", "partition": j})
+            for j, node in dim_layout]),
+    ]
+
+    if func == "merge_join":
+        stages += [
+            RuntimeStage("shuffle_fact", [
+                inv("shuffle_fact", i, "shuffle_write", node,
+                    {"src": "scan_fact", "dst": "fact_buckets",
+                     "partition": i, "num_buckets": n_join})
+                for i, node in fact_layout], deps=("scan_fact",)),
+            RuntimeStage("shuffle_dim", [
+                inv("shuffle_dim", j, "shuffle_write", node,
+                    {"src": "scan_dim", "dst": "dim_buckets",
+                     "partition": j, "num_buckets": n_join})
+                for j, node in dim_layout], deps=("scan_dim",)),
+            RuntimeStage("join", [
+                inv("join", r, "merge_join_partition", join_nodes[r],
+                    {"fact_stage": "fact_buckets", "fact_partitions": [r],
+                     "dim_stage": "dim_buckets", "dim_partitions": [r],
+                     "dst": "joined", "partition": r,
+                     "num_groups": num_groups})
+                for r in range(n_join)],
+                deps=("shuffle_fact", "shuffle_dim"),
+                ephemeral_inputs=("fact_buckets", "dim_buckets")),
+        ]
+    else:
+        stages += [
+            RuntimeStage("broadcast_dim", [
+                inv("broadcast_dim", j, "broadcast_write", node,
+                    {"src": "scan_dim", "dst": "dim_bcast", "partition": j})
+                for j, node in dim_layout], deps=("scan_dim",)),
+            RuntimeStage("join", [
+                inv("join", k, "hash_join_partition", join_nodes[k],
+                    {"fact_stage": "scan_fact",
+                     "fact_partitions": [i for i, _ in fact_layout
+                                         if i % n_join == k],
+                     "dim_stage": "dim_bcast", "dim_partitions": "all",
+                     "dst": "joined", "partition": k,
+                     "num_groups": num_groups})
+                for k in range(n_join)],
+                deps=("scan_fact", "broadcast_dim")),
+        ]
+
+    stages += [
+        RuntimeStage("partial_agg", [
+            inv("partial_agg", k, "partial_aggregate", join_nodes[k],
+                {"src": "joined", "dst": "partials", "partition": k,
+                 "num_groups": num_groups})
+            for k in range(n_join)], deps=("join",),
+            ephemeral_inputs=("joined",)),
+        RuntimeStage("final_agg", [
+            inv("final_agg", 0, "final_aggregate", join_nodes[0],
+                {"src": "partials", "dst": "result",
+                 "num_groups": num_groups})],
+            deps=("partial_agg",), ephemeral_inputs=("partials",)),
+    ]
+    return stages
+
+
+def execute_query_runtime(fact: DistTable, dim: DistTable,
+                          strategy: QueryStrategy, runtime=None,
+                          gc: GlobalController | None = None,
+                          pc: PrivateController | None = None,
+                          app: str = "query", priority: int = 10,
+                          num_groups: int = 64, invoker: str = "inline",
+                          consolidate_threshold: int = 2 << 30):
+    """Run the TPC-DS-like sub-query end-to-end on the serverless runtime.
+
+    Decisions come from the same strategy nodes the simulator planner uses;
+    here they drive *real* partitioned invocations through the store +
+    invoker. Returns ``(group_sums, runtime)`` — the runtime keeps the
+    metrics/trace for inspection or simulator replay.
+    """
+    from repro.runtime.executor import Runtime
+
+    if runtime is None:
+        if gc is None:
+            nodes = sorted(set(fact.partitions) | set(dim.partitions))
+            gc = GlobalController({n: 8 for n in nodes})
+        runtime = Runtime(gc, invoker=invoker)
+    if pc is None:
+        pc = PrivateController(app, runtime.gc, priority=priority)
+
+    dist_f, dist_d = fact.data_dist(), dim.data_dist()
+    pc.observe_data(dist_f)
+    pc.observe_data(dist_d)
+    ctx = DecisionContext(
+        data_dist={"A": dist_f, "B": dist_d},
+        node_status=runtime.gc.node_status(), profile=dict(pc.profile))
+    decision, consolidated = resolve_join_decision(
+        strategy, ctx, consolidate_threshold)
+
+    fact_layout = runtime.seed(app, "input/fact", fact.partitions)
+    dim_layout = runtime.seed(app, "input/dim", dim.partitions)
+    stages = plan_runtime_stages(app, fact_layout, dim_layout, decision,
+                                 dist_f, consolidated=consolidated,
+                                 num_groups=num_groups, priority=pc.priority)
+    runtime.execute(stages, pc=pc)
+    # feed the observed scan output distribution back into app knowledge so
+    # the next decision sees post-filter sizes, not raw input sizes
+    pc.observe_data(runtime.store.data_dist(app, "scan_fact",
+                                            name="A_scanned"))
+    return runtime.result(app), runtime
 
 
 # -- real-data-plane execution (correctness path) --------------------------------

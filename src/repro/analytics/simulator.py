@@ -119,7 +119,6 @@ class ClusterSim:
             else:  # flexible: most-free node first (backfill)
                 candidates = sorted(
                     status.free_slots, key=lambda n: -status.free_slots[n])
-            placed = False
             for node in candidates:
                 if status.free_slots.get(node, 0) <= 0:
                     continue
@@ -136,10 +135,7 @@ class ClusterSim:
                                (finish, next(self._counter), task.name))
                 self.app_cost[task.app] = self.app_cost.get(task.app, 0.0) \
                     + (finish - self.now)
-                placed = True
                 break
-            if not placed and task.node is not None:
-                continue
         self._sample()
 
     def _sample(self):

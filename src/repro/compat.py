@@ -1,0 +1,66 @@
+"""Version-tolerant JAX API shims.
+
+The codebase targets the current ``jax.shard_map`` surface
+(``axis_names=...``, ``check_vma=...``); older installs only ship
+``jax.experimental.shard_map.shard_map`` with the pre-rename kwargs
+(``auto=...``, ``check_rep=...``). Route every call through here so modules
+never probe jax versions themselves.
+"""
+
+from __future__ import annotations
+
+import jax
+
+#: True when only the experimental pre-rename shard_map is available. Its
+#: ``auto=`` partial-manual mode is incomplete there (PartitionId lowering
+#: is unimplemented under SPMD), so pipeline-parallel paths gate on this.
+LEGACY_SHARD_MAP = not hasattr(jax, "shard_map")
+if LEGACY_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _shard_map
+else:
+    _shard_map = jax.shard_map
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict (older jax returns a
+    one-element list of per-computation dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def set_mesh(mesh):
+    """Context manager pinning the global mesh: ``jax.set_mesh`` on new jax;
+    on older releases ``Mesh`` itself is the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` (static int on new jax; a unit-psum — still
+    correct in any arithmetic use — where the API predates it)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None):
+    """``jax.shard_map`` with old/new kwarg spellings papered over."""
+    kw = {}
+    if LEGACY_SHARD_MAP:
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            if auto:
+                kw["auto"] = auto
+    else:
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

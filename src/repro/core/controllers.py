@@ -144,6 +144,34 @@ class GlobalController:
                 fn("commit", claim)
             return claim
 
+    # -- invoker-facing claim path ------------------------------------------
+    #
+    # Function runtimes hold a claim only for the lifetime of one stateless
+    # invocation and must detect losing it mid-flight: ``try_commit`` is the
+    # non-raising commit, ``finish`` the release-or-report-preempted exit.
+
+    def try_commit(self, app: str, priority: int, placement: Sequence[int],
+                   tag: str = "") -> Claim | None:
+        """Commit a claim, or return None when it cannot be satisfied."""
+        try:
+            return self.commit(app, priority, placement, tag=tag)
+        except ConflictError:
+            return None
+
+    def is_active(self, claim: Claim) -> bool:
+        with self._lock:
+            return claim.claim_id in self.claims
+
+    def finish(self, claim: Claim) -> bool:
+        """Release a claim at invocation exit. Returns False if the claim had
+        already been preempted (the invocation's work must be discarded and
+        retried — safe for stateless functions)."""
+        with self._lock:
+            if claim.claim_id not in self.claims:
+                return False
+            self.release(claim)
+            return True
+
     def release(self, claim: Claim) -> None:
         with self._lock:
             if claim.claim_id not in self.claims:

@@ -43,6 +43,7 @@ from repro.core.decisions import DecisionContext
 from repro.training.optimizer import init_opt_state, opt_state_axes
 from repro.training.train_step import make_train_step
 from repro.launch.hlo_analysis import analyze
+from repro.compat import cost_analysis, set_mesh
 
 DEFAULT_OUT = Path("experiments/dryrun")
 
@@ -169,7 +170,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             fn, args, in_sh, out_sh_hint, rules, pc = build_cell(
                 cfg, shape, mesh, pc_overrides, profile=profile)
             # donate the mutable state (train: params+opt; decode: caches) —
@@ -186,7 +187,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 t_compile = time.time() - t0 - t_lower
 
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_analysis(compiled)
             hlo = compiled.as_text()
             parsed = analyze(hlo)
 

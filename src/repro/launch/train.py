@@ -29,6 +29,7 @@ from repro.models import init_lm
 from repro.parallel.sharding import use_rules
 from repro.parallel.strategies import make_rules, strategy_node
 from repro.training import init_opt_state, make_train_step
+from repro.compat import set_mesh
 
 
 def main(argv=None):
@@ -62,7 +63,7 @@ def main(argv=None):
           f"scale={pc.microbatches} schedule={decision.schedule.policy}")
 
     opt_cfg = OptimizerConfig(warmup_steps=10)
-    with jax.set_mesh(mesh), use_rules(rules):
+    with set_mesh(mesh), use_rules(rules):
         params, _ = init_lm(cfg, jax.random.PRNGKey(0))
         state = {"params": params, "opt": init_opt_state(params)}
         start = 0

@@ -22,6 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.core.config import ModelConfig
 from repro.models.layers import _init, apply_rope
 from repro.parallel.sharding import current_rules, logical_shard
@@ -155,7 +156,7 @@ def _int8_broadcast(t: jax.Array) -> jax.Array:
 
     gather_int8.defvjp(_fwd, _bwd)
 
-    return jax.shard_map(gather_int8, mesh=mesh, in_specs=(in_spec,),
+    return shard_map(gather_int8, mesh=mesh, in_specs=(in_spec,),
                          out_specs=out_spec, check_vma=False)(t)
 
 

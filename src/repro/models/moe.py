@@ -23,6 +23,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.core.config import ModelConfig, MoEConfig
 from repro.models.layers import _init
 from repro.parallel.sharding import current_rules, logical_shard
@@ -208,7 +209,7 @@ def moe_shard_map(params: Params, x: jax.Array, cfg: ModelConfig,
             y = jax.lax.all_gather(y, "model", axis=1, tiled=True)
         return y, aux
 
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, w_specs["router"], w_specs["gate"],
                   w_specs["up"], w_specs["down"]),
@@ -265,7 +266,7 @@ def moe_shard_map_local(params: Params, x: jax.Array, cfg: ModelConfig,
             out_buf, top_p, bookkeeping)
         return y, aux
 
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         body, mesh=mesh, in_specs=(x_spec,) + w_specs,
         out_specs=(x_spec, P()), check_vma=False)
     return shard_fn(x, params["router"], params["gate"], params["up"],

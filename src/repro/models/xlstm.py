@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.core.config import ModelConfig, XLSTMConfig
 from repro.models.layers import _init
 from repro.models.ssm import _causal_conv
@@ -290,7 +291,7 @@ def _slstm_scan(params: Params, gates_x: jax.Array, h: int, dv: int,
         state_specs = {k: bspec3 if v.ndim == 3 else bspec2
                        for k, v in state.items() if k != "conv"}
         st = {k: v for k, v in state.items() if k != "conv"}
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda r_, gx_, st_: _slstm_scan_body(r_, gx_, h, dv, st_),
             mesh=rules.mesh,
             in_specs=(P(None, None, None, None), bspec3, state_specs),

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import axis_size, shard_map
 
 
 def _quantize(x: jax.Array, bits: int = 8):
@@ -34,7 +34,7 @@ def compressed_allreduce(x: jax.Array, axis_name: str,
 
     x: identical-shape fp array on each shard. Returns sum over shards.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % n
     flat = jnp.pad(flat, (0, pad))
@@ -71,7 +71,7 @@ def make_compressed_grad_allreduce(mesh: Mesh, axis: str = "pod",
                  out_specs=P(*([None] * g.ndim)), check_vma=False)
         def _ar(local):
             summed = compressed_allreduce(local, axis, bits)
-            return summed / jax.lax.axis_size(axis)
+            return summed / axis_size(axis)
 
         return _ar(g)
 

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.core.config import (
     BlockKind,
     ModelConfig,
@@ -133,7 +135,7 @@ def make_pp_train_step(cfg: ModelConfig, shape: ShapeConfig,
             return jax.lax.psum(out_acc, "pod")
 
         blocks0 = params["blocks"][0]
-        fn = jax.shard_map(
+        fn = shard_map(
             body, mesh=mesh,
             in_specs=(block_specs(blocks0), P()),
             out_specs=P(),

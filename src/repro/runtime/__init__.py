@@ -1,0 +1,31 @@
+"""Executable serverless function runtime (paper's shared substrate).
+
+The control plane (``repro.core``) decides *func/scale/schedule*; this
+package executes those decisions for real: stateless function instances
+(``invoker``) run registered partitioned-analytics functions (``functions``)
+over an ephemeral externalized-state store (``store``), orchestrated as a
+stage DAG (``executor``), with per-invocation metrics (``metrics``) folded
+back into the decision workflows and optionally replayed into the cluster
+simulator so both data planes share one plan.
+"""
+
+from repro.runtime.store import Blob, ShuffleStore  # noqa: F401
+from repro.runtime.metrics import (  # noqa: F401
+    InvocationRecord,
+    MetricsSink,
+    StageMetrics,
+)
+from repro.runtime.invoker import (  # noqa: F401
+    FnContext,
+    InlineInvoker,
+    Invocation,
+    InvocationError,
+    Invoker,
+    ThreadPoolInvoker,
+)
+from repro.runtime.functions import FUNCTIONS, register  # noqa: F401
+from repro.runtime.executor import (  # noqa: F401
+    DAGExecutor,
+    Runtime,
+    RuntimeStage,
+)

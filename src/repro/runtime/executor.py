@@ -1,0 +1,127 @@
+"""DAG executor: decision tuples -> real function invocations.
+
+``RuntimeStage`` is the materialized form of one decision-workflow stage: a
+named group of invocations plus its upstream stage dependencies. The
+executor walks stages in dependency order with a barrier per stage (shuffle
+consumers must see every producer's slice), drives the pluggable invoker,
+and folds per-stage metrics back into the application's private controller
+profile so the *next* decision sees what the last execution cost (paper
+Fig. 5 step 4).
+
+``Runtime`` bundles the store + invoker + metrics behind one handle; several
+applications (private controllers) can share it, contending for slots
+through the one ``GlobalController`` — that is the paper's shared serverless
+substrate.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.controllers import GlobalController, PrivateController
+from repro.runtime.invoker import (
+    InlineInvoker,
+    Invocation,
+    Invoker,
+    ThreadPoolInvoker,
+)
+from repro.runtime.metrics import MetricsSink, StageMetrics
+from repro.runtime.store import ShuffleStore
+
+
+@dataclass
+class RuntimeStage:
+    """One stage of the physical plan: parallel invocations + stage deps."""
+
+    name: str
+    invocations: list[Invocation]
+    deps: tuple[str, ...] = ()
+    ephemeral_inputs: tuple[str, ...] = ()   # stages to GC once this finishes
+
+
+class DAGExecutor:
+    """Barrier-per-stage DAG driver over an invoker."""
+
+    def __init__(self, runtime: "Runtime"):
+        self.runtime = runtime
+
+    def run(self, stages: Sequence[RuntimeStage],
+            pc: PrivateController | None = None) -> dict[str, StageMetrics]:
+        seen: dict[str, RuntimeStage] = {}
+        for stage in stages:
+            missing = [d for d in stage.deps if d not in seen]
+            if missing:
+                raise ValueError(
+                    f"stage {stage.name!r} depends on unknown {missing}")
+            if stage.name in seen:
+                raise ValueError(f"duplicate stage {stage.name!r}")
+            seen[stage.name] = stage
+
+        invoker = self.runtime.invoker
+        metrics = self.runtime.metrics
+        app = stages[0].invocations[0].app if stages else ""
+        for stage in stages:
+            dep_invs = tuple(inv.name for d in stage.deps
+                             for inv in seen[d].invocations)
+            invoker.run_stage(stage.invocations, deps=dep_invs)
+            if pc is not None:
+                pc.record_profile(
+                    **metrics.profile_feedback(app, stage=stage.name))
+            for src in stage.ephemeral_inputs:
+                self.runtime.store.delete_stage(app, src)
+        return metrics.by_stage(app)
+
+
+class Runtime:
+    """The executable serverless substrate: store + invoker + metrics.
+
+    ``invoker`` may be an ``Invoker`` instance or one of the backend names
+    ``"inline"`` / ``"threads"``.
+    """
+
+    def __init__(self, gc: GlobalController,
+                 invoker: Invoker | str = "inline",
+                 store: ShuffleStore | None = None,
+                 metrics: MetricsSink | None = None, max_workers: int = 8):
+        self.gc = gc
+        self.store = store or ShuffleStore()
+        self.metrics = metrics or MetricsSink()
+        if isinstance(invoker, str):
+            if invoker == "inline":
+                invoker = InlineInvoker(gc, self.store, self.metrics)
+            elif invoker == "threads":
+                invoker = ThreadPoolInvoker(gc, self.store, self.metrics,
+                                            max_workers=max_workers)
+            else:
+                raise ValueError(f"unknown invoker backend {invoker!r}")
+        self.invoker = invoker
+
+    def seed(self, app: str, stage: str,
+             partitions: Mapping[int, object]) -> list[tuple[int, int]]:
+        """Load base data (node -> table) into the store; returns the
+        ``[(partition, home_node), ...]`` layout the planner places against.
+        """
+        return self.store.ingest(app, stage, partitions)
+
+    def execute(self, stages: Sequence[RuntimeStage],
+                pc: PrivateController | None = None) -> dict[str, StageMetrics]:
+        return DAGExecutor(self).run(stages, pc=pc)
+
+    def result(self, app: str, stage: str = "result", column: str = "sum",
+               ) -> np.ndarray:
+        t = self.store.get(app, stage, 0, node=-1, account=False)
+        if t is None:
+            raise KeyError(f"no result blob for app {app!r}")
+        return np.asarray(t[column])
+
+    def replay_into(self, sim, app: str | None = None,
+                    rates: Mapping[str, float] | None = None) -> int:
+        """Feed the invocation trace to a ``ClusterSim`` (one shared plan)."""
+        return self.metrics.replay_into(sim, app=app, rates=rates)
+
+    def release(self, app: str) -> int:
+        """Tear down an application's ephemeral state; returns bytes freed."""
+        return self.store.clear_app(app)

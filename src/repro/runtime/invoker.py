@@ -1,0 +1,194 @@
+"""Pluggable function-invocation backends.
+
+An ``Invocation`` names a registered function, the node it should run on and
+its priority. The invoker is the runtime half of the paper's substrate: for
+every invocation it claims one function slot through the real
+``GlobalController`` (Omega-style optimistic commit), runs the function in a
+stateless ``FnContext`` over the shuffle store, and releases the slot. If a
+higher-priority application preempted the claim while the function ran, the
+result is discarded and the invocation retried — safe precisely because
+functions are stateless and every write lands in the store under the
+invocation's own writer label (retry overwrites, never duplicates).
+
+Two backends:
+
+* ``InlineInvoker``     — sequential, deterministic (tests, oracles).
+* ``ThreadPoolInvoker`` — real parallelism across function slots.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.core.controllers import GlobalController
+from repro.runtime.metrics import InvocationRecord, MetricsSink
+from repro.runtime.store import ShuffleStore
+
+
+@dataclass(frozen=True)
+class Invocation:
+    """One stateless function instance of a stage."""
+
+    name: str                      # e.g. "query/join/3"
+    app: str
+    stage: str
+    index: int
+    func: str                      # key into the function registry
+    node: int
+    priority: int = 0
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+
+class FnContext:
+    """What a function instance sees: namespaced store access + its params.
+
+    All store traffic flows through here so the invoker can attribute
+    bytes-in/out (and per-source read volumes) to the invocation.
+    """
+
+    def __init__(self, store: ShuffleStore, inv: Invocation):
+        self._store = store
+        self.app = inv.app
+        self.node = inv.node
+        self.index = inv.index
+        self.params = dict(inv.params)
+        self.writer = inv.name
+        self.bytes_in = 0
+        self.bytes_out = 0
+        self.reads_by_node: dict[int, int] = {}
+
+    def get(self, stage: str, partition: int):
+        for src, b in self._store.read_sources(
+                self.app, stage, partition, self.node).items():
+            self.reads_by_node[src] = self.reads_by_node.get(src, 0) + b
+        t = self._store.get(self.app, stage, partition, self.node)
+        if t is not None:
+            self.bytes_in += int(t.nbytes)
+        return t
+
+    def get_all(self, stage: str):
+        out = None
+        for p in self.partitions(stage):
+            t = self.get(stage, p)
+            if t is None or t.num_rows == 0:
+                continue
+            out = t if out is None else out.concat(t)
+        return out
+
+    def put(self, stage: str, partition: int, table) -> None:
+        self.bytes_out += self._store.put(
+            self.app, stage, partition, table, self.node, writer=self.writer)
+
+    def partitions(self, stage: str) -> list[int]:
+        return self._store.partitions(self.app, stage)
+
+
+class InvocationError(RuntimeError):
+    pass
+
+
+class Invoker:
+    """Shared claim/execute/release machinery; subclasses pick concurrency.
+
+    ``intercept`` is a fault-injection hook (tests, chaos drills): it runs
+    after the slot claim commits and before the function body, i.e. while the
+    claim is live and preemptible.
+    """
+
+    def __init__(self, gc: GlobalController, store: ShuffleStore,
+                 metrics: MetricsSink | None = None, max_attempts: int = 5,
+                 starve_wait: float = 0.0,
+                 intercept: Callable[[Invocation, int], None] | None = None):
+        self.gc = gc
+        self.store = store
+        self.metrics = metrics or MetricsSink()
+        self.max_attempts = max_attempts
+        self.starve_wait = starve_wait
+        self.intercept = intercept
+        self.registry: Mapping[str, Callable[[FnContext], Any]] | None = None
+
+    def _resolve(self, name: str) -> Callable[[FnContext], Any]:
+        if self.registry is None:
+            from repro.runtime.functions import FUNCTIONS
+            self.registry = FUNCTIONS
+        try:
+            return self.registry[name]
+        except KeyError:
+            raise InvocationError(f"unregistered function {name!r}") from None
+
+    def _execute_one(self, inv: Invocation, deps: tuple[str, ...]) -> None:
+        fn = self._resolve(inv.func)
+        for attempt in range(self.max_attempts):
+            claim = self.gc.try_commit(inv.app, inv.priority, [inv.node],
+                                       tag=inv.name)
+            if claim is None:
+                # every slot on the node is held by >=-priority work; wait for
+                # a release (threaded) or spin a bounded number of times
+                if self.starve_wait:
+                    time.sleep(self.starve_wait)
+                continue
+            if self.intercept is not None:
+                self.intercept(inv, attempt)
+            t0 = time.perf_counter()
+            ctx = FnContext(self.store, inv)
+            try:
+                fn(ctx)
+            except Exception:
+                self.gc.finish(claim)
+                raise
+            t1 = time.perf_counter()
+            committed = self.gc.finish(claim)
+            self.metrics.record(InvocationRecord(
+                inv.name, inv.app, inv.stage, inv.func, inv.node, attempt,
+                "ok" if committed else "preempted", t0, t1,
+                bytes_in=ctx.bytes_in, bytes_out=ctx.bytes_out,
+                reads_by_node=dict(ctx.reads_by_node), deps=deps,
+                priority=inv.priority))
+            if committed:
+                return
+        self.metrics.record(InvocationRecord(
+            inv.name, inv.app, inv.stage, inv.func, inv.node,
+            self.max_attempts, "starved", time.perf_counter(),
+            time.perf_counter(), deps=deps, priority=inv.priority))
+        raise InvocationError(
+            f"{inv.name}: no slot after {self.max_attempts} attempts "
+            f"(preempted or starved by higher-priority claims)")
+
+    def run_stage(self, invocations: Sequence[Invocation],
+                  deps: tuple[str, ...] = ()) -> None:
+        raise NotImplementedError
+
+
+class InlineInvoker(Invoker):
+    """Sequential execution in the caller's thread — deterministic."""
+
+    def run_stage(self, invocations: Sequence[Invocation],
+                  deps: tuple[str, ...] = ()) -> None:
+        for inv in invocations:
+            self._execute_one(inv, deps)
+
+
+class ThreadPoolInvoker(Invoker):
+    """Real parallelism: one worker per in-flight function instance."""
+
+    def __init__(self, gc: GlobalController, store: ShuffleStore,
+                 metrics: MetricsSink | None = None, max_workers: int = 8,
+                 max_attempts: int = 200, starve_wait: float = 0.005,
+                 intercept: Callable[[Invocation, int], None] | None = None):
+        super().__init__(gc, store, metrics, max_attempts=max_attempts,
+                         starve_wait=starve_wait, intercept=intercept)
+        self.max_workers = max_workers
+
+    def run_stage(self, invocations: Sequence[Invocation],
+                  deps: tuple[str, ...] = ()) -> None:
+        if not invocations:
+            return
+        with ThreadPoolExecutor(
+                max_workers=min(self.max_workers, len(invocations))) as pool:
+            futures = [pool.submit(self._execute_one, inv, deps)
+                       for inv in invocations]
+            for f in futures:
+                f.result()    # propagate the first failure

@@ -1,0 +1,136 @@
+"""Per-invocation timing/bytes records + feedback into decision workflows.
+
+Every function invocation — including preempted attempts — leaves an
+``InvocationRecord``. The sink aggregates them per stage, formats the
+operator dashboards the examples print, folds profile feedback into
+``DecisionContext.profile`` (paper Fig. 5 step 4), and can replay the whole
+trace into ``ClusterSim`` so the simulated benchmarks and the real data
+plane share one plan.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Mapping
+
+
+@dataclass
+class InvocationRecord:
+    name: str
+    app: str
+    stage: str
+    func: str
+    node: int
+    attempt: int
+    status: str                    # "ok" | "preempted" | "starved"
+    started: float
+    finished: float
+    bytes_in: int = 0
+    bytes_out: int = 0
+    reads_by_node: Mapping[int, int] = field(default_factory=dict)
+    deps: tuple[str, ...] = ()
+    priority: int = 0
+
+    @property
+    def seconds(self) -> float:
+        return max(0.0, self.finished - self.started)
+
+
+@dataclass
+class StageMetrics:
+    invocations: int = 0
+    ok: int = 0
+    preempted: int = 0
+    seconds: float = 0.0
+    bytes_in: int = 0
+    bytes_out: int = 0
+
+
+class MetricsSink:
+    """Thread-safe accumulator of invocation records."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.records: list[InvocationRecord] = []
+
+    def record(self, rec: InvocationRecord) -> None:
+        with self._lock:
+            self.records.append(rec)
+
+    def for_app(self, app: str) -> list[InvocationRecord]:
+        with self._lock:
+            return [r for r in self.records if r.app == app]
+
+    # -- aggregation -----------------------------------------------------------
+
+    def by_stage(self, app: str | None = None) -> dict[str, StageMetrics]:
+        out: dict[str, StageMetrics] = {}
+        with self._lock:
+            records = list(self.records)
+        for r in records:
+            if app is not None and r.app != app:
+                continue
+            m = out.setdefault(r.stage, StageMetrics())
+            m.invocations += 1
+            m.ok += r.status == "ok"
+            m.preempted += r.status == "preempted"
+            m.seconds += r.seconds
+            m.bytes_in += r.bytes_in
+            m.bytes_out += r.bytes_out
+        return out
+
+    def profile_feedback(self, app: str, stage: str | None = None) -> dict:
+        """Flat ``{"<stage>.<metric>": value}`` dict ready to merge into
+        ``DecisionContext.profile`` via ``PrivateController.record_profile``.
+        """
+        out: dict[str, object] = {}
+        for name, m in self.by_stage(app).items():
+            if stage is not None and name != stage:
+                continue
+            out[f"{name}.seconds"] = m.seconds
+            out[f"{name}.invocations"] = m.invocations
+            out[f"{name}.bytes_in"] = m.bytes_in
+            out[f"{name}.bytes_out"] = m.bytes_out
+            out[f"{name}.preempted"] = m.preempted
+        return out
+
+    def format_table(self, app: str) -> str:
+        """Per-stage invocation/bytes dashboard (printed by the examples)."""
+        lines = [f"{'stage':16s} {'inv':>4s} {'pre':>4s} {'seconds':>9s} "
+                 f"{'bytes_in':>10s} {'bytes_out':>10s}"]
+        for name, m in self.by_stage(app).items():
+            lines.append(f"{name:16s} {m.invocations:4d} {m.preempted:4d} "
+                         f"{m.seconds:9.4f} {m.bytes_in:10d} {m.bytes_out:10d}")
+        return "\n".join(lines)
+
+    # -- trace replay into the simulator ---------------------------------------
+
+    def replay_into(self, sim, app: str | None = None,
+                    rates: Mapping[str, float] | None = None) -> int:
+        """Submit the successful invocation trace as SimTasks.
+
+        The real runtime and the simulator then share one plan: same task
+        names, dependency edges, placements and transfer volumes; durations
+        come from calibrated per-operator rates applied to the *measured*
+        bytes (or measured wall time when no rate covers the function).
+        Returns the number of tasks submitted; caller runs ``sim.run()``.
+        """
+        from repro.analytics.simulator import SimTask
+        n = 0
+        with self._lock:
+            records = list(self.records)
+        ok = {r.name for r in records if r.status == "ok"}
+        for r in records:
+            if r.status != "ok" or (app is not None and r.app != app):
+                continue
+            rate = (rates or {}).get(r.func)
+            duration = (r.bytes_in / rate) if rate and r.bytes_in \
+                else r.seconds
+            sim.submit(SimTask(
+                r.name, r.app, duration, node=r.node, priority=r.priority,
+                deps=tuple(d for d in r.deps if d in ok),
+                transfers={s: int(b) for s, b in r.reads_by_node.items()
+                           if s != r.node}))
+            n += 1
+        return n

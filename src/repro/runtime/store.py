@@ -1,0 +1,177 @@
+"""Ephemeral object store for externalized intermediate state.
+
+Serverless functions are stateless; every byte exchanged between stages goes
+through an external store (the Lambada/Pocket model adopted by the paper's
+substrate). Blobs are keyed ``(app, stage, partition)``; multiple writers may
+append slices to the same partition (that *is* the shuffle), each under its
+own writer label so a retried (preempted) invocation overwrites its previous
+slice instead of duplicating it.
+
+The store keeps per-node byte accounting — bytes resident per home node,
+bytes served cross-node per source, bytes read per reader — so shuffle
+volumes feed straight back into ``DataDist`` for the decision workflows
+(paper Fig. 5 step 4: runtime knowledge flows back into decision nodes).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Mapping
+
+import numpy as np
+
+from repro.core.decisions import DataDist
+
+
+@dataclass
+class Blob:
+    """One written slice of a partition: the payload plus its home node."""
+
+    table: object            # repro.analytics.table.Table (duck-typed)
+    node: int
+    nbytes: int
+    rows: int
+
+
+class ShuffleStore:
+    """Thread-safe ephemeral blob store with per-node byte accounting.
+
+    Lifecycle is per-(app, stage): ``delete_stage`` reclaims a stage as soon
+    as its consumers finish, ``clear_app`` tears down a whole query's state.
+    """
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        # (app, stage) -> partition -> writer -> Blob
+        self._stages: dict[tuple[str, str], dict[int, dict[str, Blob]]] = {}
+        self.resident_bytes: dict[int, int] = {}   # node -> live blob bytes
+        self.written_bytes: dict[int, int] = {}    # node -> cumulative writes
+        self.read_bytes: dict[int, int] = {}       # reader node -> bytes read
+        self.sent_bytes: dict[int, int] = {}       # source node -> remote reads
+        self.cross_node_bytes = 0                  # total shuffle traffic
+
+    # -- writes ---------------------------------------------------------------
+
+    def put(self, app: str, stage: str, partition: int, table, node: int,
+            writer: str = "") -> int:
+        """Write (or, on retry, replace) one writer's slice of a partition.
+
+        Returns the bytes written.
+        """
+        nbytes, rows = int(table.nbytes), int(table.num_rows)
+        with self._lock:
+            parts = self._stages.setdefault((app, stage), {})
+            blobs = parts.setdefault(partition, {})
+            old = blobs.get(writer)
+            if old is not None:   # preempted attempt being re-done: retract it
+                self.resident_bytes[old.node] = \
+                    self.resident_bytes.get(old.node, 0) - old.nbytes
+            blobs[writer] = Blob(table, node, nbytes, rows)
+            self.resident_bytes[node] = self.resident_bytes.get(node, 0) + nbytes
+            self.written_bytes[node] = self.written_bytes.get(node, 0) + nbytes
+        return nbytes
+
+    def ingest(self, app: str, stage: str, partitions: Mapping[int, object],
+               ) -> list[tuple[int, int]]:
+        """Seed base data: one partition per home node (node -> table).
+
+        Returns ``[(partition_index, home_node), ...]`` in index order — the
+        planner's view of where the input lives.
+        """
+        layout = []
+        for idx, (node, table) in enumerate(sorted(partitions.items())):
+            self.put(app, stage, idx, table, node, writer="seed")
+            layout.append((idx, node))
+        return layout
+
+    # -- reads ----------------------------------------------------------------
+
+    def get(self, app: str, stage: str, partition: int, node: int,
+            account: bool = True):
+        """Concatenate every writer's slice of a partition (writer-sorted, so
+        content is deterministic under concurrent invokers). Remote reads are
+        charged to the blob's home node — this is the shuffle/broadcast
+        traffic the simulator's NIC model prices. Returns None if absent."""
+        with self._lock:
+            blobs = self._stages.get((app, stage), {}).get(partition)
+            if not blobs:
+                return None
+            ordered = [blobs[w] for w in sorted(blobs)]
+            if account:
+                for blob in ordered:
+                    self.read_bytes[node] = \
+                        self.read_bytes.get(node, 0) + blob.nbytes
+                    if blob.node != node:
+                        self.sent_bytes[blob.node] = \
+                            self.sent_bytes.get(blob.node, 0) + blob.nbytes
+                        self.cross_node_bytes += blob.nbytes
+        out = ordered[0].table
+        for blob in ordered[1:]:
+            out = out.concat(blob.table)
+        return out
+
+    def partitions(self, app: str, stage: str) -> list[int]:
+        with self._lock:
+            return sorted(self._stages.get((app, stage), {}))
+
+    # -- accounting views ------------------------------------------------------
+
+    def stage_bytes(self, app: str, stage: str) -> int:
+        with self._lock:
+            return sum(b.nbytes
+                       for part in self._stages.get((app, stage), {}).values()
+                       for b in part.values())
+
+    def read_sources(self, app: str, stage: str, partition: int,
+                     reader: int) -> dict[int, int]:
+        """Bytes this partition would pull per remote source node (for trace
+        replay into the simulator's transfer model). Does not account."""
+        with self._lock:
+            blobs = self._stages.get((app, stage), {}).get(partition, {})
+            out: dict[int, int] = {}
+            for b in blobs.values():
+                if b.node != reader:
+                    out[b.node] = out.get(b.node, 0) + b.nbytes
+            return out
+
+    def data_dist(self, app: str, stage: str, name: str | None = None,
+                  ) -> DataDist:
+        """The stage's output distribution, ready for a DecisionContext."""
+        with self._lock:
+            parts = self._stages.get((app, stage), {})
+            per_node: dict[int, int] = {}
+            rows_per_part = []
+            total_rows = 0
+            for blobs in parts.values():
+                rows_per_part.append(sum(b.rows for b in blobs.values()))
+                for b in blobs.values():
+                    per_node[b.node] = per_node.get(b.node, 0) + b.nbytes
+                    total_rows += b.rows
+        sizes = np.array(rows_per_part, dtype=np.float64)
+        skew = float(sizes.max() / max(sizes.mean(), 1e-9)) if len(sizes) \
+            else 0.0
+        return DataDist(name or f"{app}/{stage}", per_node,
+                        rows=total_rows, skew=skew)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def delete_stage(self, app: str, stage: str) -> int:
+        """Drop a stage's blobs; returns bytes reclaimed (ephemerality is the
+        point: shuffle state outlives only its consumers)."""
+        with self._lock:
+            parts = self._stages.pop((app, stage), {})
+            freed = 0
+            for blobs in parts.values():
+                for b in blobs.values():
+                    self.resident_bytes[b.node] = \
+                        self.resident_bytes.get(b.node, 0) - b.nbytes
+                    freed += b.nbytes
+            return freed
+
+    def clear_app(self, app: str) -> int:
+        freed = 0
+        with self._lock:
+            for key in [k for k in self._stages if k[0] == app]:
+                freed += self.delete_stage(*key)
+        return freed

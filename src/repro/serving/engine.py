@@ -142,11 +142,13 @@ class ServingEngine:
             prompt[i, : len(toks)] = toks
             lengths[i] = len(toks)
         self.state = init_decode_state(self.cfg, b, self.max_seq)
-        logits, self.state = self._prefill(
+        _, self.state = self._prefill(
             self.params, self.state, {"tokens": jnp.asarray(prompt)})
-        # all rows advanced to max prompt position; track true lengths
-        self.state["pos"] = jnp.asarray(lengths)
-        self._last_logits = logits
+        # prefill advanced every row to max_seq (padded); rewind each row to
+        # its last *real* token, which the next decode step re-feeds — it
+        # rewrites the identical K/V at that slot and yields the true
+        # next-token logits (the padded-position prefill logits are garbage)
+        self.state["pos"] = jnp.asarray(np.maximum(lengths - 1, 0))
 
     def _step(self) -> list[Request]:
         if all(r is None for r in self.active):

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.analytics import (
     QueryStrategy,
@@ -185,6 +185,19 @@ def test_simulator_allocation_rate_bounds():
     out = sim.run()
     rate = out["allocation"].allocation_rate()
     assert 0.0 < rate <= 1.0
+
+
+def test_flexible_task_backfills_most_free_node():
+    """Regression for the dead not-placed branch in _try_start: a flexible
+    (node=None) task must land on the node with the most free slots."""
+    gc, sim = make_cluster(2, slots=2)
+    gc.commit("other", 5, [0])               # node 0: 1 free, node 1: 2 free
+    placements = {}
+    gc.subscribe(lambda ev, c: placements.setdefault(c.tag, c.placement)
+                 if ev == "commit" else None)
+    sim.submit(SimTask("flex", "app", 1.0))
+    sim.run()
+    assert placements["flex"] == (1,)
 
 
 def test_background_tasks_backfill_idle_slots():

@@ -4,6 +4,7 @@ Needs >1 device, so it runs in a subprocess with forced host devices (the
 main pytest process must keep the 1-device CPU view).
 """
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -16,7 +17,7 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from functools import partial
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
     from repro.parallel.collectives import compressed_allreduce
 
     mesh = jax.make_mesh((8,), ("pod",))
@@ -43,9 +44,13 @@ SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_compressed_allreduce_subprocess():
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    # keep the parent's backend pin: without it jax probes for accelerator
+    # plugins, which hangs on sandboxed hosts
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     result = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        timeout=300, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                          "HOME": "/root"})
+        timeout=300, env=env)
     assert result.returncode == 0, result.stderr[-2000:]
     assert "OK" in result.stdout

@@ -1,0 +1,186 @@
+"""Serverless runtime: oracle equivalence under every strategy, shuffle-store
+byte accounting, preemption/retry of stateless invocations, trace replay."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analytics import (
+    QueryStrategy,
+    Table,
+    execute_query_runtime,
+    make_cluster,
+    reference_query_numpy,
+    synth_table,
+)
+from repro.analytics.table import distribute
+from repro.core.controllers import GlobalController, PrivateController
+from repro.runtime import (
+    InlineInvoker,
+    MetricsSink,
+    Runtime,
+    ShuffleStore,
+    ThreadPoolInvoker,
+)
+
+STRATEGIES = ("static_merge", "static_hash", "dynamic", "dynamic_fig6")
+
+
+def make_dist_tables(rows=4096, keyspace=2048, dim_rows=512,
+                     fact_nodes=4, dim_nodes=2, seed=1):
+    fact = synth_table("f", rows, keyspace, seed=seed)
+    dimc = synth_table("d", dim_rows, keyspace, seed=seed + 1,
+                       unique_keys=True)
+    dim = Table({**dimc.columns,
+                 "cat": jnp.arange(dim_rows, dtype=jnp.int32) % 64})
+    ref = reference_query_numpy(fact, dim)
+    return (distribute(fact, range(fact_nodes), "A"),
+            distribute(dim, range(dim_nodes), "B"), ref)
+
+
+# -- oracle equivalence across all four strategies -------------------------------
+
+
+@pytest.mark.parametrize("strat", STRATEGIES)
+def test_runtime_query_matches_oracle(strat):
+    fd, dd, ref = make_dist_tables()
+    got, runtime = execute_query_runtime(fd, dd, QueryStrategy(strat))
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    stages = runtime.metrics.by_stage("query")
+    assert stages["final_agg"].ok == 1
+    assert all(m.preempted == 0 for m in stages.values())
+
+
+def test_runtime_query_threadpool_matches_oracle():
+    fd, dd, ref = make_dist_tables(seed=5)
+    got, runtime = execute_query_runtime(
+        fd, dd, QueryStrategy("static_merge"), invoker="threads")
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    got2, _ = execute_query_runtime(
+        fd, dd, QueryStrategy("static_hash"), invoker="threads")
+    np.testing.assert_allclose(got2, ref, atol=1e-3)
+
+
+def test_runtime_folds_metrics_into_decision_profile():
+    """Paper Fig. 5 step 4: execution feedback lands in the app profile."""
+    fd, dd, _ = make_dist_tables()
+    gc = GlobalController({n: 8 for n in range(4)})
+    pc = PrivateController("query", gc, priority=10)
+    execute_query_runtime(fd, dd, QueryStrategy("static_hash"), gc=gc, pc=pc)
+    assert pc.profile["join.invocations"] >= 1
+    assert pc.profile["join.seconds"] > 0
+    assert pc.profile["scan_fact.bytes_out"] > 0
+    assert "A_scanned" in pc.data_dist     # post-filter distribution observed
+
+
+# -- shuffle store accounting -----------------------------------------------------
+
+
+def test_store_byte_accounting_and_cross_node_reads():
+    store = ShuffleStore()
+    t0 = synth_table("t", 256, 512, seed=0)
+    t1 = synth_table("t", 128, 512, seed=1)
+    n0, n1 = t0.nbytes, t1.nbytes
+    store.put("app", "s", 0, t0, node=0, writer="w0")
+    store.put("app", "s", 0, t1, node=1, writer="w1")
+
+    got = store.get("app", "s", 0, node=0)      # w1's slice is remote
+    assert got.num_rows == 384
+    assert store.written_bytes == {0: n0, 1: n1}
+    assert store.sent_bytes == {1: n1}
+    assert store.cross_node_bytes == n1
+
+    store.get("app", "s", 0, node=2)            # both slices remote
+    assert store.cross_node_bytes == n1 + n0 + n1
+
+    dist = store.data_dist("app", "s")
+    assert dist.size == n0 + n1
+    assert dict(dist.bytes_per_node) == {0: n0, 1: n1}
+    assert dist.rows == 384
+
+
+def test_store_retry_overwrites_and_delete_reclaims():
+    store = ShuffleStore()
+    big = synth_table("t", 512, 512, seed=0)
+    small = synth_table("t", 64, 512, seed=0)
+    store.put("app", "s", 0, big, node=0, writer="inv")
+    store.put("app", "s", 0, small, node=0, writer="inv")   # retry: replace
+    assert store.get("app", "s", 0, node=0).num_rows == 64
+    assert store.resident_bytes[0] == small.nbytes
+    freed = store.delete_stage("app", "s")
+    assert freed == small.nbytes
+    assert store.resident_bytes[0] == 0
+    assert store.get("app", "s", 0, node=0) is None
+
+
+def test_runtime_query_shuffle_volume_accounted():
+    fd, dd, _ = make_dist_tables()
+    _, runtime = execute_query_runtime(fd, dd, QueryStrategy("static_merge"))
+    store = runtime.store
+    # the all-to-all shuffle must move bytes off-node, and everything a node
+    # served remotely is part of the global cross-node total
+    assert store.cross_node_bytes > 0
+    assert sum(store.sent_bytes.values()) == store.cross_node_bytes
+    # scan output stayed resident (only buckets/joined/partials are GC'd)
+    assert store.stage_bytes("query", "scan_fact") > 0
+    assert store.stage_bytes("query", "fact_buckets") == 0   # ephemeral
+
+
+# -- preemption of a low-priority invocation mid-DAG ------------------------------
+
+
+def test_low_priority_invocation_preempted_mid_dag_and_retried():
+    fd, dd, ref = make_dist_tables(fact_nodes=2, dim_nodes=2)
+    gc = GlobalController({0: 1, 1: 1})      # one slot per node: contended
+    store, metrics = ShuffleStore(), MetricsSink()
+    fired = []
+
+    def urgent_arrival(inv, attempt):
+        # while the low-priority join holds its slot, a high-priority claim
+        # lands on the same node -> Omega preempts the in-flight invocation
+        if inv.stage == "join" and inv.index == 0 and not fired:
+            fired.append(inv.name)
+            hi = gc.commit("urgent", 99, [inv.node])
+            gc.release(hi)
+
+    invoker = InlineInvoker(gc, store, metrics, intercept=urgent_arrival)
+    runtime = Runtime(gc, invoker=invoker, store=store, metrics=metrics)
+    got, _ = execute_query_runtime(
+        fd, dd, QueryStrategy("static_hash"), runtime=runtime, priority=0)
+
+    np.testing.assert_allclose(got, ref, atol=1e-3)      # retry healed it
+    records = [r for r in metrics.records if r.status == "preempted"]
+    assert len(records) == 1 and records[0].stage == "join"
+    assert any(p.victim.priority == 0 for p in gc.preemptions)
+    retried = [r for r in metrics.records
+               if r.name == records[0].name and r.status == "ok"]
+    assert retried and retried[0].attempt == records[0].attempt + 1
+
+
+def test_threadpool_invoker_contends_through_controller():
+    """More in-flight instances than slots: claims serialize, all complete."""
+    fd, dd, ref = make_dist_tables(fact_nodes=2, dim_nodes=2)
+    gc = GlobalController({0: 1, 1: 1})
+    runtime = Runtime(gc, invoker="threads")
+    got, _ = execute_query_runtime(
+        fd, dd, QueryStrategy("static_hash"), runtime=runtime)
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    assert sum(gc.used.values()) == 0        # every claim released
+
+
+# -- trace replay into the simulator ----------------------------------------------
+
+
+def test_invocation_trace_replays_into_simulator():
+    fd, dd, _ = make_dist_tables()
+    _, runtime = execute_query_runtime(fd, dd, QueryStrategy("static_merge"))
+    ok = [r for r in runtime.metrics.records if r.status == "ok"]
+    gc2, sim = make_cluster(4)
+    n = runtime.replay_into(sim)
+    assert n == len(ok)
+    out = sim.run()
+    assert len(sim.done) == n
+    assert out["completion"]["query"] > 0
+    # replay preserves the DAG: the final aggregate finishes last
+    assert sim.tasks["query/final_agg/0"].finished == \
+        max(t.finished for t in sim.tasks.values())

@@ -2,6 +2,7 @@
 (MoE all-to-all dispatch, int8 KV broadcast, sLSTM scan). These need >1
 device, so they run in subprocesses with forced host devices."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -10,6 +11,8 @@ import pytest
 
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
        "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+if "JAX_PLATFORMS" in os.environ:   # keep the backend pin: plugin
+    ENV["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]  # probing can hang
 
 
 def run(script: str):
@@ -26,6 +29,7 @@ def test_moe_shard_map_matches_reference():
     import dataclasses, jax, jax.numpy as jnp
     from repro.configs import get_config
     from repro.models.moe import init_moe, moe, moe_shard_map
+    from repro.compat import set_mesh
     from repro.parallel.sharding import ShardingRules, use_rules
 
     cfg = get_config("granite-moe-1b-a400m", smoke=True)
@@ -40,7 +44,7 @@ def test_moe_shard_map_matches_reference():
                                  "embed": None, "expert": "model",
                                  "w_embed": None,
                                  "moe_impl": "shard_map_a2a"})
-    with jax.set_mesh(mesh), use_rules(rules):
+    with set_mesh(mesh), use_rules(rules):
         y, _ = jax.jit(lambda p, x: moe_shard_map(p, x, cfg))(params, x)
         # gradients flow
         g = jax.jit(jax.grad(
@@ -60,6 +64,7 @@ def test_int8_kv_broadcast_close_and_differentiable():
     import jax, jax.numpy as jnp
     from repro.configs import get_config
     from repro.models.attention import init_attention, attention
+    from repro.compat import set_mesh
     from repro.parallel.sharding import ShardingRules, use_rules
 
     cfg = get_config("qwen1.5-4b", smoke=True)
@@ -74,7 +79,7 @@ def test_int8_kv_broadcast_close_and_differentiable():
 
     def run_case(extra):
         rules = ShardingRules(mesh, {**base, **extra})
-        with jax.set_mesh(mesh), use_rules(rules):
+        with set_mesh(mesh), use_rules(rules):
             out = jax.jit(lambda p, x: attention(p, x, pos, cfg,
                                                  q_chunk=8))(params, x)
             g = jax.jit(jax.grad(lambda p, x: jnp.sum(
@@ -99,6 +104,7 @@ def test_slstm_shard_map_matches_unsharded():
     import jax, jax.numpy as jnp
     from repro.configs import get_config
     from repro.models.xlstm import init_slstm, slstm
+    from repro.compat import set_mesh
     from repro.parallel.sharding import ShardingRules, use_rules
 
     cfg = get_config("xlstm-1.3b", smoke=True)
@@ -110,7 +116,7 @@ def test_slstm_shard_map_matches_unsharded():
     rules = ShardingRules(mesh, {"batch": "data", "seq": None,
                                  "embed": None, "inner": None,
                                  "w_embed": None})
-    with jax.set_mesh(mesh), use_rules(rules):
+    with set_mesh(mesh), use_rules(rules):
         out = jax.jit(lambda p, x: slstm(p, x, cfg))(params, x)
     err = float(jnp.max(jnp.abs(ref - out)))
     assert err < 1e-3, err
@@ -120,12 +126,17 @@ def test_slstm_shard_map_matches_unsharded():
 
 @pytest.mark.slow
 def test_pipeline_parallel_matches_plain_train_step():
+    from repro.compat import LEGACY_SHARD_MAP
+    if LEGACY_SHARD_MAP:
+        pytest.skip("pipeline needs shard_map partial-manual (axis_names) "
+                    "mode; legacy auto= lowering lacks PartitionId support")
     run("""
     import jax, jax.numpy as jnp
     from repro.configs import get_config
     from repro.core.config import OptimizerConfig, ParallelConfig, ShapeConfig
     from repro.models import init_lm
     from repro.parallel.pipeline import make_pp_train_step, pp_rules
+    from repro.compat import set_mesh
     from repro.parallel.sharding import ShardingRules, use_rules
     from repro.training.train_step import make_train_step, _loss_fn
     from repro.training.optimizer import init_opt_state
@@ -141,7 +152,7 @@ def test_pipeline_parallel_matches_plain_train_step():
     params, _ = init_lm(cfg, jax.random.PRNGKey(0))
     batch = {k: jnp.asarray(v) for k, v in
              SyntheticSource(cfg, shape, seed=0).batch(0).items()}
-    with jax.set_mesh(mesh), use_rules(rules):
+    with set_mesh(mesh), use_rules(rules):
         state = {"params": params, "opt": init_opt_state(params)}
         pp_step = jax.jit(make_pp_train_step(
             cfg, shape, OptimizerConfig(warmup_steps=0), pc, rules,

@@ -3,7 +3,7 @@
 import threading
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     ConflictError,
@@ -74,6 +74,25 @@ def test_preemption_does_not_evict_higher():
     gc.commit("query", 10, [0, 0])
     with pytest.raises(ConflictError):
         gc.commit("bg", 0, [0])
+
+
+def test_try_commit_returns_none_instead_of_raising():
+    gc = make_gc(nodes=1, slots=1)
+    a = gc.try_commit("a", 5, [0])
+    assert a is not None
+    assert gc.try_commit("b", 5, [0]) is None     # equal priority: no slot
+    assert gc.finish(a) is True
+    assert gc.finish(a) is False                  # already released
+
+
+def test_finish_reports_mid_flight_preemption():
+    gc = make_gc(nodes=1, slots=1)
+    low = gc.commit("bg", 0, [0])
+    hi = gc.commit("query", 10, [0])              # evicts the running claim
+    assert gc.is_active(hi) and not gc.is_active(low)
+    assert gc.finish(low) is False                # invoker must retry
+    assert gc.finish(hi) is True
+    assert sum(gc.used.values()) == 0
 
 
 def test_node_status_view_is_consistent():
