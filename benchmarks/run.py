@@ -12,13 +12,19 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks import fig4_join, fig7_query, fig8_sharing, roofline
+from benchmarks import (
+    bench_executor,
+    fig4_join,
+    fig7_query,
+    fig8_sharing,
+    roofline,
+)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig4", "fig7", "fig8", "roofline"])
+                    choices=["fig4", "fig7", "fig8", "roofline", "executor"])
     args = ap.parse_args(argv)
 
     sections = {
@@ -26,6 +32,7 @@ def main(argv=None) -> None:
         "fig7": fig7_query.main,
         "fig8": fig8_sharing.main,
         "roofline": roofline.main,
+        "executor": bench_executor.main,
     }
     if args.only:
         sections = {args.only: sections[args.only]}

@@ -1,11 +1,13 @@
 """The TPC-DS-like sub-query executed for real on the serverless runtime.
 
-The same decision workflows that drive the cluster simulator here drive
-actual partitioned function invocations: scan -> shuffle-by-hash or
-broadcast -> per-partition join -> partial/final aggregation, all through
-the ephemeral shuffle store with slot claims committed to the global
-controller. The invocation trace is then replayed into ``ClusterSim`` so
-the simulated benchmarks and the real data plane share one plan.
+One decision workflow per query (scan → join → exchange → aggregate) drives
+actual partitioned function invocations through the dependency-driven DAG
+executor: the scan decision binds up front, the scans run (concurrently
+under the ``threads`` invoker), and when the fact scan lands the planner
+folds the observed post-filter distribution back into the workflow context
+and late-binds the join/exchange/aggregate decisions — re-planning the
+query mid-flight. The invocation trace is then replayed into ``ClusterSim``
+so the simulated benchmarks and the real data plane share one plan.
 
     PYTHONPATH=src python examples/runtime_query.py
 """
@@ -16,6 +18,7 @@ import numpy as np
 from repro.analytics import (
     QueryStrategy,
     Table,
+    build_query_workflow,
     execute_query_runtime,
     make_cluster,
     reference_query_numpy,
@@ -37,12 +40,23 @@ def main():
     dim_dist = distribute(dim, range(2), "B")
 
     for strat in ("static_hash", "static_merge", "dynamic"):
+        wf = build_query_workflow(QueryStrategy(strat))
         got, runtime = execute_query_runtime(
-            fact_dist, dim_dist, QueryStrategy(strat))
+            fact_dist, dim_dist, QueryStrategy(strat), workflow=wf,
+            invoker="threads")
         err = np.abs(got - ref).max()
         print(f"\n=== strategy {strat}: group-sum max err vs numpy oracle "
               f"{err:.2e} ===")
         assert err < 1e-3, strat
+        run = wf.last_run
+        print("decision sequence (bound in order, join late-bound on the "
+              "observed post-filter scan output):")
+        for name, d in run.sequence:
+            print(f"  {name:10s} -> func={d.func:12s} scale={d.scale:3d} "
+                  f"schedule={d.schedule.policy}")
+        scanned = run.ctx.data_dist.get("A_scanned")
+        print(f"observed post-filter fact side: {scanned.size} bytes over "
+              f"{len(scanned.loc)} nodes (raw input {fact_dist.nbytes})")
         print(runtime.metrics.format_table("query"))
         store = runtime.store
         print(f"shuffle store: {store.cross_node_bytes} cross-node bytes, "

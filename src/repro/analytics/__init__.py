@@ -10,6 +10,12 @@ from repro.analytics.decisions import (  # noqa: F401
     join_decision_node,
     scheduling_decision_node,
 )
+from repro.analytics.planner import (  # noqa: F401
+    AdaptiveQueryPlan,
+    build_query_workflow,
+    estimate_scan_output,
+    plan_query_with_workflow,
+)
 from repro.analytics.simulator import (  # noqa: F401
     ClusterSim,
     SimTask,

@@ -1,0 +1,540 @@
+"""Workflow-driven adaptive query planner (paper Fig. 5 step 4, Fig. 6).
+
+One ``DecisionWorkflow`` per query carries four per-phase decision nodes —
+``scan``, ``join``, ``exchange``, ``aggregate`` — and drives *both* data
+planes. ``AdaptiveQueryPlan`` is the runtime side: the DAG executor calls it
+back as physical stages complete, it folds the observed metrics and the
+**post-filter** scan output distribution into the workflow context, binds the
+next decisions, and emits the newly materialized stages — a mid-query
+re-plan. ``plan_query_with_workflow`` is the simulator side: it walks the
+identical workflow, substituting an *estimated* scan output for the measured
+one, and submits ``SimTask``s. Because both planners evaluate the same
+workflow object, the simulated and real plans come from identical decision
+sequences.
+
+The join node is late-bound on the scan stage: it sees ``A_scanned`` (the
+post-filter fact distribution) instead of the raw input, so a highly
+selective filter observed at runtime can flip the join variant mid-query —
+a decision impossible under a plan-everything-up-front planner.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.analytics.decisions import ALPHA
+from repro.core.decisions import (
+    DataDist,
+    Decision,
+    DecisionContext,
+    DecisionNode,
+    DecisionWorkflow,
+    Schedule,
+    WorkflowRun,
+    partition_skew,
+)
+
+MAX_JOIN_FANOUT = 64      # runtime join bucket-space cap
+
+
+# ---------------------------------------------------------------------------
+# Per-phase decision nodes
+# ---------------------------------------------------------------------------
+
+
+def observed_join_ctx(ctx: DecisionContext) -> DecisionContext:
+    """The join node's view: the post-scan distribution (``A_scanned``),
+    when observed, replaces the raw fact input as side ``A``."""
+    scanned = ctx.data_dist.get("A_scanned")
+    if scanned is None:
+        return ctx
+    return DecisionContext(
+        data_dist=dict(ctx.data_dist, A=scanned),
+        node_status=ctx.node_status, app=ctx.app, profile=ctx.profile,
+        decisions=ctx.decisions)
+
+
+def scan_decision(ctx: DecisionContext) -> Decision:
+    """Scans are data-local: one wave per ~ALPHA bytes over the input homes."""
+    dist_f = ctx.data_dist["A"]
+    nodes = tuple(sorted(dist_f.loc)) or \
+        tuple(sorted(ctx.node_status.total_slots))
+    scale = max(1, int(dist_f.size / ALPHA))
+    return Decision("scan_filter", scale, Schedule("round-robin", nodes))
+
+
+def consolidation_applies(strategy_name: str, decision: Decision,
+                          total_bytes: int, threshold: int) -> bool:
+    """The paper's consolidation policy, shared by the workflow join node
+    and the legacy up-front shim: either the decision node itself opted in
+    (cost model) or the literal Fig. 6 strategy sees the whole input fit
+    one node."""
+    return bool(decision.extra("consolidate", False)) or (
+        strategy_name == "dynamic_fig6" and total_bytes <= threshold)
+
+
+def strategy_join_fn(strategy, consolidate_threshold: int = 2 << 30):
+    """Wrap a strategy's join choice as a late-bound workflow node fn.
+
+    The wrapped node sees the observed post-filter fact distribution. When
+    the paper's consolidation applies (whole input fits one node) the
+    decision itself is rewritten to what will actually run — hash join,
+    packed onto the data-heaviest node — so the recorded sequence never
+    contradicts the materialized plan.
+    """
+
+    def fn(ctx: DecisionContext) -> Decision:
+        decision = strategy.join_method(observed_join_ctx(ctx))
+        dist_f = ctx.data_dist["A"]
+        total = dist_f.size + ctx.data_dist["B"].size
+        if consolidation_applies(strategy.name, decision, total,
+                                 consolidate_threshold) and \
+                not decision.extra("consolidate", False):
+            slots = ctx.node_status.total_slots
+            cap = max(slots.values()) if slots else 8
+            target = max(dist_f.bytes_per_node,
+                         key=dist_f.bytes_per_node.get) \
+                if dist_f.bytes_per_node else 0
+            decision = Decision(
+                "hash_join", min(join_fanout(decision), cap),
+                Schedule("packing", (target,), slots_per_node=cap),
+                extras=decision.extras + (("consolidate", True),))
+        return decision
+
+    return fn
+
+
+def join_fanout(join: Decision) -> int:
+    return max(1, min(int(join.scale), MAX_JOIN_FANOUT))
+
+
+def exchange_decision(ctx: DecisionContext) -> Decision:
+    """The exchange pattern follows the bound join decision: merge join
+    hash-shuffles both sides into the join's bucket space, hash join
+    broadcasts the (small) dim side from its home nodes."""
+    join = ctx.decisions["join"]
+    dist_a = ctx.data_dist.get("A_scanned", ctx.data_dist["A"])
+    dist_b = ctx.data_dist["B"]
+    n_join = join_fanout(join)
+    if join.func == "merge_join":
+        producers = tuple(sorted(dist_a.loc | dist_b.loc)) or \
+            tuple(sorted(ctx.node_status.total_slots))
+        return Decision("shuffle", n_join,
+                        Schedule("round-robin", producers),
+                        extras=(("num_buckets", n_join),))
+    homes = tuple(sorted(dist_b.loc)) or \
+        tuple(sorted(ctx.node_status.total_slots))
+    return Decision("broadcast", max(1, len(homes)),
+                    Schedule("round-robin", homes))
+
+
+def aggregate_decision(ctx: DecisionContext) -> Decision:
+    """Two-phase aggregation co-located with the join outputs."""
+    join = ctx.decisions["join"]
+    return Decision("two_phase", join_fanout(join), join.schedule)
+
+
+def build_query_workflow(strategy, name: str | None = None,
+                         consolidate_threshold: int = 2 << 30,
+                         ) -> DecisionWorkflow:
+    """The query's decision workflow (paper Fig. 5): four per-phase nodes.
+
+    ``join`` is late-bound on the scan stage's feedback; ``exchange`` and
+    ``aggregate`` follow the join *decision* (their physical stages bracket
+    the join stage) but await only the scan feedback.
+    """
+    wf = DecisionWorkflow(name or f"query[{strategy.name}]")
+    wf.add(DecisionNode("scan", scan_decision))
+    wf.add(DecisionNode("join",
+                        strategy_join_fn(strategy, consolidate_threshold)),
+           depends_on=("scan",))
+    wf.add(DecisionNode("exchange", exchange_decision),
+           depends_on=("join",), await_feedback=("scan",))
+    wf.add(DecisionNode("aggregate", aggregate_decision),
+           depends_on=("exchange",), await_feedback=("scan",))
+    return wf
+
+
+def resolve_query_workflow(workflow: DecisionWorkflow | None, strategy,
+                           consolidate_threshold: int | None,
+                           ) -> DecisionWorkflow:
+    """Reuse a caller-supplied workflow or build one. The consolidation
+    threshold is baked into a workflow's join node at build time, so
+    passing both is a contradiction, not a merge."""
+    if workflow is not None:
+        if consolidate_threshold is not None:
+            raise ValueError(
+                "consolidate_threshold is fixed when the workflow is built; "
+                "pass it to build_query_workflow, not alongside an existing "
+                "workflow")
+        return workflow
+    return build_query_workflow(
+        strategy,
+        consolidate_threshold=2 << 30 if consolidate_threshold is None
+        else consolidate_threshold)
+
+
+# ---------------------------------------------------------------------------
+# Scan feedback estimation (simulator stand-in for measured store state)
+# ---------------------------------------------------------------------------
+
+
+def estimate_scan_output(fact, name: str = "A_scanned",
+                         filter_col: str = "v0", filter_gt: float = 0.0,
+                         selectivity: float | None = None) -> DataDist:
+    """Simulated scan feedback: the post-filter output distribution.
+
+    For materialized ``DistTable``s the filter is evaluated per partition —
+    exact, byte-for-byte what the runtime's scan stage writes to the store —
+    so a shared workflow binds identical decisions on either plane. For
+    ``PhantomTable``s (GB-scale, size-only) a selectivity factor scales the
+    input distribution; the default 1.0 preserves the planner's historical
+    sizing.
+    """
+    parts = getattr(fact, "partitions", None)
+    if parts is not None and selectivity is None:
+        per_node: dict[int, int] = {}
+        rows_per_part: list[int] = []
+        total_rows = 0
+        for node, t in sorted(parts.items()):
+            rows = t.num_rows
+            kept = rows
+            if rows and filter_col in t.columns:
+                kept = int((np.asarray(t[filter_col]) > filter_gt).sum())
+            row_bytes = (t.nbytes // rows) if rows else 0
+            per_node[node] = per_node.get(node, 0) + kept * row_bytes
+            rows_per_part.append(kept)
+            total_rows += kept
+        return DataDist(name, per_node, rows=total_rows,
+                        skew=partition_skew(rows_per_part))
+    dist = fact.data_dist()
+    s = 1.0 if selectivity is None else float(selectivity)
+    per = {n: int(b * s) for n, b in dist.bytes_per_node.items()}
+    return DataDist(name, per, rows=int(dist.rows * s), skew=dist.skew)
+
+
+# ---------------------------------------------------------------------------
+# Runtime materialization: decisions -> RuntimeStages
+# ---------------------------------------------------------------------------
+
+
+def _inv(app: str, stage: str, i: int, fn: str, node: int, params: dict,
+         priority: int):
+    from repro.runtime.invoker import Invocation
+    return Invocation(f"{app}/{stage}/{i}", app, stage, i, fn, node,
+                      priority=priority, params=params)
+
+
+def scan_stages(app: str, fact_layout: Sequence[tuple[int, int]],
+                dim_layout: Sequence[tuple[int, int]],
+                priority: int = 0) -> list:
+    """Data-local scan stages; independent, so the dependency-driven
+    executor runs them concurrently under a parallel invoker."""
+    from repro.runtime.executor import RuntimeStage
+    return [
+        RuntimeStage("scan_fact", [
+            _inv(app, "scan_fact", i, "scan_filter", node,
+                 {"src": "input/fact", "dst": "scan_fact", "partition": i,
+                  "filter_col": "v0", "filter_gt": 0.0}, priority)
+            for i, node in fact_layout]),
+        RuntimeStage("scan_dim", [
+            _inv(app, "scan_dim", j, "scan_filter", node,
+                 {"src": "input/dim", "dst": "scan_dim", "partition": j},
+                 priority)
+            for j, node in dim_layout]),
+    ]
+
+
+def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
+                dim_layout: Sequence[tuple[int, int]], decision: Decision,
+                dist_f: DataDist, consolidated: bool = False,
+                num_groups: int = 64, priority: int = 0,
+                exchange: Decision | None = None,
+                aggregate: Decision | None = None) -> list:
+    """Materialize the post-scan plan from the bound decisions: the
+    ``exchange`` decision picks the pattern (``shuffle`` both sides into the
+    join's bucket space vs ``broadcast`` the dim side), the join decision's
+    ``scale``/``schedule`` set the join fan-out and placement, and the
+    ``aggregate`` decision places the two-phase aggregation. When only the
+    join decision is given (legacy up-front path) the exchange pattern is
+    derived from its ``func`` and aggregation co-locates with the join;
+    ``consolidated`` then packs the whole tail onto the data-heaviest node
+    (workflow-built consolidated decisions already carry that placement)."""
+    from repro.runtime.executor import RuntimeStage
+
+    all_nodes = tuple(sorted({n for _, n in fact_layout} |
+                             {n for _, n in dim_layout}))
+    n_join = join_fanout(decision)
+    join_nodes = decision.schedule.place(n_join) or \
+        tuple(all_nodes[i % len(all_nodes)] for i in range(n_join))
+    func = decision.func
+    if consolidated:
+        target = max(dist_f.bytes_per_node, key=dist_f.bytes_per_node.get) \
+            if dist_f.bytes_per_node else all_nodes[0]
+        join_nodes = (target,) * n_join
+        func = "hash_join"
+    pattern = exchange.func if exchange is not None else \
+        ("shuffle" if func == "merge_join" else "broadcast")
+    agg_nodes = (aggregate.schedule.place(n_join) or join_nodes) \
+        if aggregate is not None and not consolidated else join_nodes
+
+    stages = []
+    if pattern == "shuffle":
+        stages += [
+            RuntimeStage("shuffle_fact", [
+                _inv(app, "shuffle_fact", i, "shuffle_write", node,
+                     {"src": "scan_fact", "dst": "fact_buckets",
+                      "partition": i, "num_buckets": n_join}, priority)
+                for i, node in fact_layout], deps=("scan_fact",)),
+            RuntimeStage("shuffle_dim", [
+                _inv(app, "shuffle_dim", j, "shuffle_write", node,
+                     {"src": "scan_dim", "dst": "dim_buckets",
+                      "partition": j, "num_buckets": n_join}, priority)
+                for j, node in dim_layout], deps=("scan_dim",)),
+            RuntimeStage("join", [
+                _inv(app, "join", r, "merge_join_partition", join_nodes[r],
+                     {"fact_stage": "fact_buckets", "fact_partitions": [r],
+                      "dim_stage": "dim_buckets", "dim_partitions": [r],
+                      "dst": "joined", "partition": r,
+                      "num_groups": num_groups}, priority)
+                for r in range(n_join)],
+                deps=("shuffle_fact", "shuffle_dim"),
+                ephemeral_inputs=("fact_buckets", "dim_buckets")),
+        ]
+    else:
+        stages += [
+            RuntimeStage("broadcast_dim", [
+                _inv(app, "broadcast_dim", j, "broadcast_write", node,
+                     {"src": "scan_dim", "dst": "dim_bcast", "partition": j},
+                     priority)
+                for j, node in dim_layout], deps=("scan_dim",)),
+            RuntimeStage("join", [
+                _inv(app, "join", k, "hash_join_partition", join_nodes[k],
+                     {"fact_stage": "scan_fact",
+                      "fact_partitions": [i for i, _ in fact_layout
+                                          if i % n_join == k],
+                      "dim_stage": "dim_bcast", "dim_partitions": "all",
+                      "dst": "joined", "partition": k,
+                      "num_groups": num_groups}, priority)
+                for k in range(n_join)],
+                deps=("scan_fact", "broadcast_dim")),
+        ]
+
+    stages += [
+        RuntimeStage("partial_agg", [
+            _inv(app, "partial_agg", k, "partial_aggregate", agg_nodes[k],
+                 {"src": "joined", "dst": "partials", "partition": k,
+                  "num_groups": num_groups}, priority)
+            for k in range(n_join)], deps=("join",),
+            ephemeral_inputs=("joined",)),
+        RuntimeStage("final_agg", [
+            _inv(app, "final_agg", 0, "final_aggregate", agg_nodes[0],
+                 {"src": "partials", "dst": "result",
+                  "num_groups": num_groups}, priority)],
+            deps=("partial_agg",), ephemeral_inputs=("partials",)),
+    ]
+    return stages
+
+
+class AdaptiveQueryPlan:
+    """Stage planner driving one ``WorkflowRun`` against the runtime.
+
+    The DAG executor calls ``on_stage_complete`` as physical stages finish.
+    Once both scan stages are done, the measured stage metrics and the
+    observed post-filter distribution are folded into the workflow context,
+    the join/exchange/aggregate decisions bind (late), and the tail of the
+    physical plan is emitted — the paper's decide→execute→re-decide loop.
+    """
+
+    def __init__(self, run: WorkflowRun, app: str,
+                 fact_layout: Sequence[tuple[int, int]],
+                 dim_layout: Sequence[tuple[int, int]],
+                 num_groups: int = 64, priority: int = 0):
+        self.run = run
+        self.app = app
+        self.fact_layout = list(fact_layout)
+        self.dim_layout = list(dim_layout)
+        self.num_groups = num_groups
+        self.priority = priority
+        self._completed: set[str] = set()
+        self._tail_planned = False
+
+    def initial_stages(self) -> list:
+        self.run.decide("scan")
+        return scan_stages(self.app, self.fact_layout, self.dim_layout,
+                           self.priority)
+
+    def on_stage_complete(self, stage: str, runtime, pc=None) -> list:
+        self._completed.add(stage)
+        # The join decision needs only the *fact* side's observed post-filter
+        # output (the dim side has no filter, its input dist is app
+        # knowledge) — so the tail binds as soon as scan_fact lands, and
+        # e.g. shuffle_fact overlaps a still-running scan_dim.
+        if self._tail_planned or "scan_fact" not in self._completed:
+            return []
+        self._tail_planned = True
+        # Fig. 5 step 4: fold observed output + metrics, then decide late.
+        scanned = runtime.store.data_dist(self.app, "scan_fact",
+                                          name="A_scanned")
+        if pc is not None:
+            pc.observe_data(scanned)
+        self.run.observe(scanned)
+        self.run.refresh_status(runtime.gc.node_status())
+        self.run.feedback("scan",
+                          runtime.metrics.profile_feedback(self.app))
+        join_d = self.run.decide("join")
+        exchange_d = self.run.decide("exchange")
+        aggregate_d = self.run.decide("aggregate")
+        # consolidated join decisions already carry their packed placement,
+        # so the materialization is exactly what the sequence records
+        return tail_stages(
+            self.app, self.fact_layout, self.dim_layout, join_d,
+            self.run.ctx.data_dist["A"], num_groups=self.num_groups,
+            priority=self.priority, exchange=exchange_d,
+            aggregate=aggregate_d)
+
+
+# ---------------------------------------------------------------------------
+# Simulator materialization: the same workflow -> SimTasks
+# ---------------------------------------------------------------------------
+
+
+def plan_query_with_workflow(sim, pc, fact, dim, strategy,
+                             app: str = "query",
+                             workflow: DecisionWorkflow | None = None,
+                             consolidate_threshold: int | None = None,
+                             scan_selectivity: float | None = None,
+                             ) -> WorkflowRun:
+    """Plan the TPC-DS-like sub-query into ``sim`` through the decision
+    workflow; the scan stage's feedback is *estimated* (exactly, for
+    materialized tables) instead of measured. Returns the ``WorkflowRun``
+    whose decision sequence the submitted tasks materialize."""
+    from repro.analytics.simulator import calibrated_rates
+
+    rates = calibrated_rates()
+    gc = pc.gc
+    status = gc.node_status()
+    nodes = sorted(status.total_slots)
+    slots = max(status.total_slots.values())
+
+    dist_f, dist_d = fact.data_dist(), dim.data_dist()
+    pc.observe_data(dist_f)
+    pc.observe_data(dist_d)
+    wf = resolve_query_workflow(workflow, strategy, consolidate_threshold)
+    ctx = DecisionContext(data_dist={"A": dist_f, "B": dist_d},
+                          node_status=status, profile=dict(pc.profile))
+    run = wf.start(ctx)
+    run.decide("scan")
+
+    # simulate the scan stage: the estimated post-filter output distribution
+    # is the feedback the late-bound join decision consumes
+    scanned = estimate_scan_output(fact, selectivity=scan_selectivity)
+    run.observe(scanned)
+    run.feedback("scan", {"scan_fact.bytes_out": scanned.size,
+                          "scan_fact.estimated": True})
+    decision = run.decide("join")
+    run.decide("exchange")
+    run.decide("aggregate")
+    consolidated = bool(decision.extra("consolidate", False))
+
+    _submit_sim_tasks(sim, app, dist_f, dist_d, scanned, decision,
+                      consolidated, nodes, slots, rates)
+    return run
+
+
+def _submit_sim_tasks(sim, app, dist_f, dist_d, scanned, decision,
+                      consolidated, nodes, slots, rates) -> None:
+    from repro.analytics.simulator import SimTask
+
+    # ---- scan phase 1: map over fact partitions (scan+filter+project) -----
+    map1 = []
+    if consolidated:
+        # paper Fig. 7 (2 GB case): pack everything onto one node; the only
+        # transfers are the initial partition pulls.
+        target = max(dist_f.bytes_per_node, key=dist_f.bytes_per_node.get)
+        n_tasks = min(slots, max(1, int(dist_f.size / ALPHA)))
+        per = dist_f.size / n_tasks
+        for i in range(n_tasks):
+            src = nodes[i % len(nodes)]
+            sim.submit(SimTask(
+                f"{app}/map1/{i}", app, per / rates["scan"], node=target,
+                priority=10,
+                transfers={src: int(per)} if src != target else {}))
+            map1.append(f"{app}/map1/{i}")
+    else:
+        n_tasks = max(1, int(dist_f.size / ALPHA))
+        placement = Schedule("round-robin", tuple(nodes)).place(n_tasks)
+        per = dist_f.size / n_tasks
+        for i, node in enumerate(placement):
+            data_node = nodes[i % len(nodes)]
+            sim.submit(SimTask(
+                f"{app}/map1/{i}", app, per / rates["scan"], node=node,
+                priority=10,
+                transfers={data_node: int(per)} if data_node != node else {}))
+            map1.append(f"{app}/map1/{i}")
+
+    # ---- scan phase 2: map over dim partitions ----------------------------
+    map2 = []
+    n_tasks2 = max(1, int(dist_d.size / ALPHA))
+    place2 = Schedule("round-robin", tuple(sorted(dist_d.loc))).place(n_tasks2)
+    per2 = dist_d.size / n_tasks2
+    for i, node in enumerate(place2):
+        sim.submit(SimTask(f"{app}/map2/{i}", app, per2 / rates["scan"],
+                           node=node, priority=10))
+        map2.append(f"{app}/map2/{i}")
+
+    # ---- join phase: sized by the *post-scan* volume ----------------------
+    join_nodes = decision.schedule.place(decision.scale) or tuple(nodes)
+    n_join = len(join_nodes)
+    per_join = scanned.size / n_join
+
+    if consolidated:
+        target = max(dist_f.bytes_per_node, key=dist_f.bytes_per_node.get)
+        for i in range(min(slots, n_join)):
+            sim.submit(SimTask(
+                f"{app}/join/{i}", app,
+                per_join / rates["hash_probe"]
+                + dist_d.size / max(1, n_join) / rates["hash_build"],
+                node=target, priority=10, deps=tuple(map1 + map2)))
+    elif decision.func == "merge_join":
+        # shuffle both sides by key: every join task pulls its hash range
+        # from every map task's node (all-to-all), then sort-merges.
+        for i, node in enumerate(join_nodes):
+            pulls = {n: int((per_join + dist_d.size / n_join)
+                            / max(1, len(nodes)))
+                     for n in nodes if n != node}
+            sim.submit(SimTask(
+                f"{app}/join/{i}", app,
+                (per_join + dist_d.size / n_join) / rates["merge_join"],
+                node=node, priority=10, deps=tuple(map1 + map2),
+                transfers=pulls))
+    else:
+        # hash join: broadcast the whole dim table once per *node* (senders =
+        # dim's home nodes, serialized — the Fig. 4c effect); the first task
+        # on a node builds the table, co-located tasks share it and probe.
+        dim_homes = sorted(dist_d.loc) or nodes
+        seen_nodes: set[int] = set()
+        for i, node in enumerate(join_nodes):
+            first_on_node = node not in seen_nodes
+            seen_nodes.add(node)
+            src = dim_homes[i % len(dim_homes)]
+            pulls = {src: int(dist_d.size)} \
+                if (first_on_node and src != node) else {}
+            dur = per_join / rates["hash_probe"]
+            if first_on_node:
+                dur += dist_d.size / rates["hash_build"]
+            sim.submit(SimTask(
+                f"{app}/join/{i}", app, dur, node=node, priority=10,
+                deps=tuple(map1 + map2), transfers=pulls))
+
+    # ---- final aggregation ------------------------------------------------
+    join_names = [t for t in sim.tasks if t.startswith(f"{app}/join/")]
+    agg_node = join_nodes[0] if join_nodes else nodes[0]
+    pulls = {n: int(scanned.size / max(1, n_join) / 16)
+             for n in set(join_nodes) if n != agg_node}
+    sim.submit(SimTask(f"{app}/agg", app,
+                       scanned.size / 16 / rates["agg"], node=agg_node,
+                       priority=10, deps=tuple(join_names),
+                       transfers=pulls))

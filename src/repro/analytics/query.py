@@ -5,19 +5,18 @@
        WHERE f.v0 > 0
        GROUP BY d.cat
 
-Execution under Proteus: every phase is a decision node; the decision tuple
-(func, scale, schedule) is turned into SimTasks for the cluster simulator,
-with task durations taken from calibrated real-operator rates and shuffle
-volumes from the actual table sizes. The ``dynamic`` strategy additionally
-runs the paper's packing consolidation when the whole input fits one node.
-
-``execute_query_jax`` runs the same logical plan for real on the in-process
-JAX data plane (used by correctness tests against a numpy oracle), and
-``execute_query_runtime`` runs it on the serverless function runtime
-(``repro.runtime``): the decision tuple is materialized into real
-partitioned function invocations — scan, shuffle-by-hash or broadcast,
-per-partition hash/merge join, partial + final aggregation — over the
-ephemeral shuffle store, with slot claims through the global controller.
+Execution under Proteus: one decision workflow per query (scan → join →
+exchange → aggregate decision nodes, see ``repro.analytics.planner``) drives
+both data planes. Decisions are **late-bound**: the join node is evaluated
+only after the scan stage's runtime feedback — including the observed
+post-filter fact distribution — has been folded into the context, so a
+selective filter can flip the join variant mid-query. On the serverless
+runtime the dependency-driven DAG executor interleaves decision evaluation
+with stage completion through ``AdaptiveQueryPlan``; on the cluster
+simulator the same workflow binds the same decision sequence against an
+estimated scan output. ``execute_query_runtime`` and ``plan_query_tasks``
+are thin wrappers over that shared machinery; ``execute_query_jax`` runs
+the logical plan in-process for correctness tests against a numpy oracle.
 """
 
 from __future__ import annotations
@@ -29,21 +28,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analytics import operators as ops
-from repro.analytics.decisions import ALPHA, join_decision_node
-from repro.analytics.simulator import ClusterSim, SimTask, calibrated_rates
+from repro.analytics.decisions import ALPHA
+from repro.analytics.planner import (
+    AdaptiveQueryPlan,
+    plan_query_with_workflow,
+    resolve_query_workflow as _resolve_workflow,
+    scan_stages,
+    tail_stages,
+)
+from repro.analytics.simulator import ClusterSim
 from repro.analytics.table import DistTable, Table
 from repro.core.controllers import GlobalController, PrivateController
-from repro.core.decisions import DataDist, Decision, DecisionContext, Schedule
-
-ROW_BYTES = 8  # key(4) + packed values, matching calibration units
-
+from repro.core.decisions import (
+    DataDist,
+    Decision,
+    DecisionContext,
+    DecisionWorkflow,
+    Schedule,
+)
 
 @dataclass
 class QueryStrategy:
     """S-M = static merge, S-H = static hash, DYN = decision workflow.
 
     "dynamic" is the refined cost-model decision node (paper Fig. 5 step 4);
-    "dynamic_fig6" is the literal T1/T2 threshold node of Fig. 6.
+    "dynamic_fig6" is the literal T1/T2 threshold node of Fig. 6. The
+    strategy supplies the join node's decision function; everything else
+    (late binding, per-phase nodes, materialization) is shared.
     """
 
     name: str   # static_merge | static_hash | dynamic | dynamic_fig6
@@ -53,7 +64,8 @@ class QueryStrategy:
             from repro.analytics.decisions import cost_model_join_node
             return cost_model_join_node().decide(ctx)
         if self.name == "dynamic_fig6":
-            return join_decision_node().decide(ctx)
+            from repro.analytics.decisions import join_decision
+            return join_decision(ctx)
         func = "merge_join" if self.name == "static_merge" else "hash_join"
         dist_a, dist_b = ctx.data_dist["A"], ctx.data_dist["B"]
         nodes = tuple(sorted(dist_a.loc | dist_b.loc))
@@ -64,130 +76,30 @@ class QueryStrategy:
 def resolve_join_decision(strategy: QueryStrategy, ctx: DecisionContext,
                           consolidate_threshold: int = 2 << 30,
                           ) -> tuple[Decision, bool]:
-    """Run the strategy's decision node; returns (decision, consolidated).
+    """Compatibility shim: run the strategy's join choice once, up front.
 
-    Shared by the simulator planner and the runtime planner so both data
-    planes materialize the *same* decision tuple.
+    New code should build a workflow (``build_query_workflow``) so the join
+    decision late-binds on observed scan output; this path exists for
+    callers that make a single a-priori decision.
     """
+    from repro.analytics.planner import consolidation_applies
+
     decision = strategy.join_method(ctx)
     total_bytes = sum(d.size for d in ctx.data_dist.values())
-    consolidated = bool(decision.extra("consolidate", False)) or (
-        strategy.name == "dynamic_fig6"
-        and total_bytes <= consolidate_threshold)
-    return decision, consolidated
+    return decision, consolidation_applies(
+        strategy.name, decision, total_bytes, consolidate_threshold)
 
 
 def plan_query_tasks(sim: ClusterSim, pc: PrivateController,
                      fact: DistTable, dim: DistTable,
                      strategy: QueryStrategy, app: str = "query",
-                     consolidate_threshold: int = 2 << 30) -> None:
-    """Emit the task DAG for the sub-query under a strategy."""
-    rates = calibrated_rates()
-    gc = pc.gc
-    status = gc.node_status()
-    nodes = sorted(status.total_slots)
-    slots = max(status.total_slots.values())
-
-    dist_f, dist_d = fact.data_dist(), dim.data_dist()
-    pc.observe_data(dist_f)
-    pc.observe_data(dist_d)
-    ctx = DecisionContext(
-        data_dist={"A": dist_f, "B": dist_d},
-        node_status=status)
-
-    decision, consolidated = resolve_join_decision(
-        strategy, ctx, consolidate_threshold)
-
-    # ---- Phase 1: map over fact partitions (scan+filter+project) ----------
-    map1 = []
-    if consolidated:
-        # paper Fig. 7 (2 GB case): pack everything onto one node; the only
-        # transfers are the initial partition pulls.
-        target = max(dist_f.bytes_per_node, key=dist_f.bytes_per_node.get)
-        n_tasks = min(slots, max(1, int(dist_f.size / ALPHA)))
-        per = dist_f.size / n_tasks
-        for i in range(n_tasks):
-            src = nodes[i % len(nodes)]
-            sim.submit(SimTask(
-                f"{app}/map1/{i}", app, per / rates["scan"], node=target,
-                priority=10,
-                transfers={src: int(per)} if src != target else {}))
-            map1.append(f"{app}/map1/{i}")
-    else:
-        n_tasks = max(1, int(dist_f.size / ALPHA))
-        placement = Schedule("round-robin", tuple(nodes)).place(n_tasks)
-        per = dist_f.size / n_tasks
-        for i, node in enumerate(placement):
-            data_node = nodes[i % len(nodes)]
-            sim.submit(SimTask(
-                f"{app}/map1/{i}", app, per / rates["scan"], node=node,
-                priority=10,
-                transfers={data_node: int(per)} if data_node != node else {}))
-            map1.append(f"{app}/map1/{i}")
-
-    # ---- Phase 2: map over dim partitions ---------------------------------
-    map2 = []
-    n_tasks2 = max(1, int(dist_d.size / ALPHA))
-    place2 = Schedule("round-robin", tuple(sorted(dist_d.loc))).place(n_tasks2)
-    per2 = dist_d.size / n_tasks2
-    for i, node in enumerate(place2):
-        sim.submit(SimTask(f"{app}/map2/{i}", app, per2 / rates["scan"],
-                           node=node, priority=10))
-        map2.append(f"{app}/map2/{i}")
-
-    # ---- Join phase: the Fig. 6 decision node ------------------------------
-    join_nodes = decision.schedule.place(decision.scale) or tuple(nodes)
-    n_join = len(join_nodes)
-    per_join = dist_f.size / n_join
-
-    if consolidated:
-        target = max(dist_f.bytes_per_node, key=dist_f.bytes_per_node.get)
-        for i in range(min(slots, n_join)):
-            sim.submit(SimTask(
-                f"{app}/join/{i}", app,
-                per_join / rates["hash_probe"]
-                + dist_d.size / max(1, n_join) / rates["hash_build"],
-                node=target, priority=10, deps=tuple(map1 + map2)))
-    elif decision.func == "merge_join":
-        # shuffle both sides by key: every join task pulls its hash range
-        # from every map task's node (all-to-all), then sort-merges.
-        for i, node in enumerate(join_nodes):
-            pulls = {n: int((per_join + dist_d.size / n_join)
-                            / max(1, len(nodes)))
-                     for n in nodes if n != node}
-            sim.submit(SimTask(
-                f"{app}/join/{i}", app,
-                (per_join + dist_d.size / n_join) / rates["merge_join"],
-                node=node, priority=10, deps=tuple(map1 + map2),
-                transfers=pulls))
-    else:
-        # hash join: broadcast the whole dim table once per *node* (senders =
-        # dim's home nodes, serialized — the Fig. 4c effect); the first task
-        # on a node builds the table, co-located tasks share it and probe.
-        dim_homes = sorted(dist_d.loc) or nodes
-        seen_nodes: set[int] = set()
-        for i, node in enumerate(join_nodes):
-            first_on_node = node not in seen_nodes
-            seen_nodes.add(node)
-            src = dim_homes[i % len(dim_homes)]
-            pulls = {src: int(dist_d.size)} \
-                if (first_on_node and src != node) else {}
-            dur = per_join / rates["hash_probe"]
-            if first_on_node:
-                dur += dist_d.size / rates["hash_build"]
-            sim.submit(SimTask(
-                f"{app}/join/{i}", app, dur, node=node, priority=10,
-                deps=tuple(map1 + map2), transfers=pulls))
-
-    # ---- Final aggregation --------------------------------------------------
-    join_names = [t for t in sim.tasks if t.startswith(f"{app}/join/")]
-    agg_node = join_nodes[0] if join_nodes else nodes[0]
-    pulls = {n: int(dist_f.size / max(1, n_join) / 16)
-             for n in set(join_nodes) if n != agg_node}
-    sim.submit(SimTask(f"{app}/agg", app,
-                       dist_f.size / 16 / rates["agg"], node=agg_node,
-                       priority=10, deps=tuple(join_names),
-                       transfers=pulls))
+                     consolidate_threshold: int | None = None,
+                     workflow: DecisionWorkflow | None = None) -> None:
+    """Emit the task DAG for the sub-query — thin wrapper over the
+    workflow-driven planner (``plan_query_with_workflow``)."""
+    plan_query_with_workflow(
+        sim, pc, fact, dim, strategy, app=app, workflow=workflow,
+        consolidate_threshold=consolidate_threshold)
 
 
 # -- runtime execution: decisions -> real partitioned invocations ----------------
@@ -197,103 +109,14 @@ def plan_runtime_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                         dim_layout: Sequence[tuple[int, int]],
                         decision: Decision, dist_f: DataDist,
                         consolidated: bool = False, num_groups: int = 64,
-                        priority: int = 0) -> "list[RuntimeStage]":
-    """Materialize a decision tuple into the physical stage DAG.
-
-    The layouts are ``[(partition, home_node), ...]`` as returned by
-    ``Runtime.seed``. The decision's ``func`` picks the exchange pattern
-    (merge_join => hash-shuffle both sides; hash_join => broadcast the dim
-    side), its ``scale`` sets the join fan-out and its ``schedule`` places
-    the join instances — scans stay data-local regardless (the decision
-    workflow governs the *join* group, as in the paper's Fig. 6).
-    """
-    from repro.runtime.executor import RuntimeStage
-    from repro.runtime.invoker import Invocation
-
-    all_nodes = tuple(sorted({n for _, n in fact_layout} |
-                             {n for _, n in dim_layout}))
-    n_join = max(1, min(int(decision.scale), 64))
-    join_nodes = decision.schedule.place(n_join) or \
-        tuple(all_nodes[i % len(all_nodes)] for i in range(n_join))
-    func = decision.func
-    if consolidated:
-        # pack the whole pipeline onto the data-heaviest node: the only
-        # cross-node traffic left is the initial partition pulls
-        target = max(dist_f.bytes_per_node, key=dist_f.bytes_per_node.get) \
-            if dist_f.bytes_per_node else all_nodes[0]
-        join_nodes = (target,) * n_join
-        func = "hash_join"
-
-    def inv(stage, i, fn, node, params):
-        return Invocation(f"{app}/{stage}/{i}", app, stage, i, fn, node,
-                          priority=priority, params=params)
-
-    stages = [
-        RuntimeStage("scan_fact", [
-            inv("scan_fact", i, "scan_filter", node,
-                {"src": "input/fact", "dst": "scan_fact", "partition": i,
-                 "filter_col": "v0", "filter_gt": 0.0})
-            for i, node in fact_layout]),
-        RuntimeStage("scan_dim", [
-            inv("scan_dim", j, "scan_filter", node,
-                {"src": "input/dim", "dst": "scan_dim", "partition": j})
-            for j, node in dim_layout]),
-    ]
-
-    if func == "merge_join":
-        stages += [
-            RuntimeStage("shuffle_fact", [
-                inv("shuffle_fact", i, "shuffle_write", node,
-                    {"src": "scan_fact", "dst": "fact_buckets",
-                     "partition": i, "num_buckets": n_join})
-                for i, node in fact_layout], deps=("scan_fact",)),
-            RuntimeStage("shuffle_dim", [
-                inv("shuffle_dim", j, "shuffle_write", node,
-                    {"src": "scan_dim", "dst": "dim_buckets",
-                     "partition": j, "num_buckets": n_join})
-                for j, node in dim_layout], deps=("scan_dim",)),
-            RuntimeStage("join", [
-                inv("join", r, "merge_join_partition", join_nodes[r],
-                    {"fact_stage": "fact_buckets", "fact_partitions": [r],
-                     "dim_stage": "dim_buckets", "dim_partitions": [r],
-                     "dst": "joined", "partition": r,
-                     "num_groups": num_groups})
-                for r in range(n_join)],
-                deps=("shuffle_fact", "shuffle_dim"),
-                ephemeral_inputs=("fact_buckets", "dim_buckets")),
-        ]
-    else:
-        stages += [
-            RuntimeStage("broadcast_dim", [
-                inv("broadcast_dim", j, "broadcast_write", node,
-                    {"src": "scan_dim", "dst": "dim_bcast", "partition": j})
-                for j, node in dim_layout], deps=("scan_dim",)),
-            RuntimeStage("join", [
-                inv("join", k, "hash_join_partition", join_nodes[k],
-                    {"fact_stage": "scan_fact",
-                     "fact_partitions": [i for i, _ in fact_layout
-                                         if i % n_join == k],
-                     "dim_stage": "dim_bcast", "dim_partitions": "all",
-                     "dst": "joined", "partition": k,
-                     "num_groups": num_groups})
-                for k in range(n_join)],
-                deps=("scan_fact", "broadcast_dim")),
-        ]
-
-    stages += [
-        RuntimeStage("partial_agg", [
-            inv("partial_agg", k, "partial_aggregate", join_nodes[k],
-                {"src": "joined", "dst": "partials", "partition": k,
-                 "num_groups": num_groups})
-            for k in range(n_join)], deps=("join",),
-            ephemeral_inputs=("joined",)),
-        RuntimeStage("final_agg", [
-            inv("final_agg", 0, "final_aggregate", join_nodes[0],
-                {"src": "partials", "dst": "result",
-                 "num_groups": num_groups})],
-            deps=("partial_agg",), ephemeral_inputs=("partials",)),
-    ]
-    return stages
+                        priority: int = 0) -> list:
+    """Compatibility shim: materialize a single up-front join decision into
+    the full physical stage list (scans + exchange + join + aggregation).
+    The adaptive path builds the same stages incrementally via
+    ``AdaptiveQueryPlan``."""
+    return scan_stages(app, fact_layout, dim_layout, priority) + tail_stages(
+        app, fact_layout, dim_layout, decision, dist_f,
+        consolidated=consolidated, num_groups=num_groups, priority=priority)
 
 
 def execute_query_runtime(fact: DistTable, dim: DistTable,
@@ -302,13 +125,19 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
                           pc: PrivateController | None = None,
                           app: str = "query", priority: int = 10,
                           num_groups: int = 64, invoker: str = "inline",
-                          consolidate_threshold: int = 2 << 30):
+                          consolidate_threshold: int | None = None,
+                          workflow: DecisionWorkflow | None = None,
+                          barrier: bool = False):
     """Run the TPC-DS-like sub-query end-to-end on the serverless runtime.
 
-    Decisions come from the same strategy nodes the simulator planner uses;
-    here they drive *real* partitioned invocations through the store +
-    invoker. Returns ``(group_sums, runtime)`` — the runtime keeps the
-    metrics/trace for inspection or simulator replay.
+    One decision workflow drives the whole query: the scan decision binds
+    up front, the executor launches the (independent) scan stages, and when
+    they complete the planner folds the observed post-filter distribution
+    plus stage metrics back into the context and binds the join/exchange/
+    aggregate decisions — the paper's interleaved decide→execute→re-decide
+    loop. Pass ``workflow`` to share one workflow object across planners
+    (e.g. with the simulator) and ``barrier=True`` to force the legacy
+    stage-at-a-time executor. Returns ``(group_sums, runtime)``.
     """
     from repro.runtime.executor import Runtime
 
@@ -323,22 +152,18 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
     dist_f, dist_d = fact.data_dist(), dim.data_dist()
     pc.observe_data(dist_f)
     pc.observe_data(dist_d)
+    wf = _resolve_workflow(workflow, strategy, consolidate_threshold)
     ctx = DecisionContext(
         data_dist={"A": dist_f, "B": dist_d},
         node_status=runtime.gc.node_status(), profile=dict(pc.profile))
-    decision, consolidated = resolve_join_decision(
-        strategy, ctx, consolidate_threshold)
+    run = wf.start(ctx)
 
     fact_layout = runtime.seed(app, "input/fact", fact.partitions)
     dim_layout = runtime.seed(app, "input/dim", dim.partitions)
-    stages = plan_runtime_stages(app, fact_layout, dim_layout, decision,
-                                 dist_f, consolidated=consolidated,
-                                 num_groups=num_groups, priority=pc.priority)
-    runtime.execute(stages, pc=pc)
-    # feed the observed scan output distribution back into app knowledge so
-    # the next decision sees post-filter sizes, not raw input sizes
-    pc.observe_data(runtime.store.data_dist(app, "scan_fact",
-                                            name="A_scanned"))
+    plan = AdaptiveQueryPlan(run, app, fact_layout, dim_layout,
+                             num_groups=num_groups, priority=pc.priority)
+    runtime.execute(plan.initial_stages(), pc=pc, planner=plan,
+                    barrier=barrier)
     return runtime.result(app), runtime
 
 

@@ -9,7 +9,10 @@ grows — Fig. 4c — and mis-placed functions pay remote-read costs — Fig. 4e
 
 Slot accounting goes through the real ``GlobalController`` (Omega-style
 commits + priority preemption), so Fig. 8's fine-grained sharing runs the
-actual control plane, not a model of it.
+actual control plane, not a model of it. Task DAGs for the paper's query
+come from the same decision workflow that drives the serverless runtime
+(``repro.analytics.planner``), so simulated and real plans materialize
+identical decision sequences.
 """
 
 from __future__ import annotations

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.decisions import DataDist
+from repro.core.decisions import DataDist, partition_skew
 
 
 @dataclass
@@ -72,10 +72,7 @@ class DistTable:
 
     def data_dist(self) -> DataDist:
         per_node = {n: p.nbytes for n, p in self.partitions.items()}
-        sizes = np.array([p.num_rows for p in self.partitions.values()],
-                         dtype=np.float64)
-        skew = float(sizes.max() / max(sizes.mean(), 1e-9)) if len(sizes) \
-            else 0.0
+        skew = partition_skew(p.num_rows for p in self.partitions.values())
         return DataDist(self.name, per_node, rows=self.num_rows, skew=skew)
 
     def gather(self) -> Table:

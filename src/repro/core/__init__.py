@@ -30,8 +30,11 @@ from .decisions import (  # noqa: F401
     DecisionContext,
     DecisionNode,
     DecisionWorkflow,
+    LateBindingError,
     NodeStatus,
     Schedule,
+    Stage,
+    WorkflowRun,
     default_node,
 )
 from .controllers import (  # noqa: F401

@@ -100,7 +100,17 @@ class GlobalController:
             return (sum(self.used.values()) / total) if total else 0.0
 
     def subscribe(self, fn: Callable[[str, Claim], None]) -> None:
-        self._listeners.append(fn)
+        with self._lock:
+            self._listeners.append(fn)
+
+    def _notify(self, event: str, claim: Claim) -> None:
+        # Called with the controller lock *released* (listeners may block or
+        # re-enter the controller); snapshot under the lock so a listener
+        # subscribing mid-notify can't mutate the list being iterated.
+        with self._lock:
+            listeners = tuple(self._listeners)
+        for fn in listeners:
+            fn(event, claim)
 
     # -- Omega-style optimistic commit --------------------------------------
 
@@ -111,38 +121,45 @@ class GlobalController:
         Raises ConflictError when demand cannot be satisfied even after
         preempting every lower-priority claim on the contended nodes.
         """
-        with self._lock:
-            demand: dict[int, int] = {}
-            for node in placement:
-                if node not in self.total:
-                    raise KeyError(f"unknown node {node}")
-                demand[node] = demand.get(node, 0) + 1
+        evicted: list[Claim] = []
+        try:
+            with self._lock:
+                demand: dict[int, int] = {}
+                for node in placement:
+                    if node not in self.total:
+                        raise KeyError(f"unknown node {node}")
+                    demand[node] = demand.get(node, 0) + 1
 
-            shortfall = {
-                n: need - (self.total[n] - self.used[n])
-                for n, need in demand.items()
-                if need > self.total[n] - self.used[n]
-            }
-            if shortfall:
-                self._preempt_for(shortfall, priority, app)
                 shortfall = {
                     n: need - (self.total[n] - self.used[n])
                     for n, need in demand.items()
                     if need > self.total[n] - self.used[n]
                 }
                 if shortfall:
-                    raise ConflictError(
-                        f"claim by {app} (prio {priority}) unsatisfiable",
-                        shortfall,
-                    )
+                    evicted = self._preempt_for(shortfall, priority, app)
+                    shortfall = {
+                        n: need - (self.total[n] - self.used[n])
+                        for n, need in demand.items()
+                        if need > self.total[n] - self.used[n]
+                    }
+                    if shortfall:
+                        raise ConflictError(
+                            f"claim by {app} (prio {priority}) unsatisfiable",
+                            shortfall,
+                        )
 
-            claim = Claim(next(self._ids), app, priority, tuple(placement), tag)
-            for node, need in demand.items():
-                self.used[node] += need
-            self.claims[claim.claim_id] = claim
-            for fn in self._listeners:
-                fn("commit", claim)
-            return claim
+                claim = Claim(next(self._ids), app, priority,
+                              tuple(placement), tag)
+                for node, need in demand.items():
+                    self.used[node] += need
+                self.claims[claim.claim_id] = claim
+        finally:
+            # Notifications fire outside the lock: a blocking or re-entrant
+            # listener must not stall every other thread's slot traffic.
+            for victim in evicted:
+                self._notify("release", victim)
+        self._notify("commit", claim)
+        return claim
 
     # -- invoker-facing claim path ------------------------------------------
     #
@@ -167,40 +184,50 @@ class GlobalController:
         already been preempted (the invocation's work must be discarded and
         retried — safe for stateless functions)."""
         with self._lock:
-            if claim.claim_id not in self.claims:
-                return False
-            self.release(claim)
-            return True
+            active = self._release_locked(claim)
+        if active:
+            self._notify("release", claim)
+        return active
 
     def release(self, claim: Claim) -> None:
         with self._lock:
-            if claim.claim_id not in self.claims:
-                return
-            del self.claims[claim.claim_id]
-            for node, count in claim.slots_per_node().items():
-                self.used[node] -= count
-            for fn in self._listeners:
-                fn("release", claim)
+            active = self._release_locked(claim)
+        if active:
+            self._notify("release", claim)
+
+    def _release_locked(self, claim: Claim) -> bool:
+        """Bookkeeping half of a release; caller holds the lock and emits
+        the notification after dropping it."""
+        if claim.claim_id not in self.claims:
+            return False
+        del self.claims[claim.claim_id]
+        for node, count in claim.slots_per_node().items():
+            self.used[node] -= count
+        return True
 
     def _preempt_for(self, shortfall: Mapping[int, int], priority: int,
-                     app: str) -> None:
+                     app: str) -> list[Claim]:
         """Evict lowest-priority claims on contended nodes (paper: priority
-        arbitration; effective because low-priority work is delay-tolerant)."""
+        arbitration; effective because low-priority work is delay-tolerant).
+        Returns the victims; the caller notifies listeners after unlocking."""
         victims = sorted(
             (c for c in self.claims.values() if c.priority < priority),
             key=lambda c: c.priority,
         )
         need = dict(shortfall)
+        evicted: list[Claim] = []
         for victim in victims:
             if not any(n in need and need[n] > 0 for n in victim.placement):
                 continue
-            self.release(victim)
+            self._release_locked(victim)
+            evicted.append(victim)
             self.preemptions.append(Preemption(victim, app))
             for node, count in victim.slots_per_node().items():
                 if node in need:
                     need[node] -= count
             if all(v <= 0 for v in need.values()):
-                return
+                break
+        return evicted
 
 
 class PrivateController:
@@ -250,3 +277,8 @@ class PrivateController:
     def run_workflow(self, executor, app_info: Mapping | None = None):
         ctx = self.context(app_info)
         return self.workflow.run(ctx, executor)
+
+    def start_run(self, app_info: Mapping | None = None):
+        """Open a late-bound ``WorkflowRun`` over this app's knowledge; the
+        executor interleaves ``decide``/``feedback`` with its stages."""
+        return self.workflow.start(self.context(app_info))

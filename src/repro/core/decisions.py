@@ -15,13 +15,21 @@ distribution + node/mesh status) and emits a decision tuple
 
 A *decision workflow* is a DAG of decision nodes evaluated at runtime, between
 the stages of an application (query phases, training steps, serving batches).
-Applications that need no customization fall back to ``default_node`` —
-mirroring the paper's fallback to plain function workflows.
+Decisions are **late-bound**: a stage's node is evaluated only once its
+upstream stages have decided and the runtime feedback it awaits has been
+folded into the context (paper Fig. 5 step 4) — so a decision made between
+two application stages sees what the earlier stages actually produced, not
+what the planner guessed up front. ``WorkflowRun`` is the incremental
+evaluation handle executors drive; ``DecisionWorkflow.run`` remains the
+one-shot convenience loop. Applications that need no customization fall back
+to ``default_node`` — mirroring the paper's fallback to plain function
+workflows.
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
@@ -53,6 +61,16 @@ class DataDist:
         return frozenset(n for n, b in self.bytes_per_node.items() if b > 0)
 
 
+def partition_skew(counts: Iterable[int]) -> float:
+    """max/mean per-partition load — the skew figure every ``DataDist``
+    producer (tables, shuffle store, scan estimates) must agree on."""
+    counts = list(counts)
+    if not counts:
+        return 0.0
+    mean = sum(counts) / len(counts)
+    return float(max(counts) / max(mean, 1e-9))
+
+
 @dataclass
 class NodeStatus:
     """Cluster/mesh resource view offered by the global controller."""
@@ -80,6 +98,10 @@ class DecisionContext:
     node_status: NodeStatus = field(default_factory=NodeStatus)
     app: Mapping[str, Any] = field(default_factory=dict)      # app semantics
     profile: Mapping[str, Any] = field(default_factory=dict)  # runtime feedback
+    # Decisions already bound earlier in the same workflow run; downstream
+    # nodes may condition on them (e.g. the exchange pattern follows the
+    # join variant). Populated by ``WorkflowRun.decide``.
+    decisions: Mapping[str, "Decision"] = field(default_factory=dict)
     # Feedback from previous runs (paper Fig. 5, step 4) is merged into
     # ``profile`` by the private controller between executions.
 
@@ -131,14 +153,19 @@ DecisionFn = Callable[[DecisionContext], Decision]
 
 
 class DecisionNode:
-    """A named, user-supplied control-plane decision point."""
+    """A named, user-supplied control-plane decision point.
+
+    ``history`` keeps the last ``max_history`` decisions (bounded so
+    long-lived nodes shared across many queries don't grow without limit);
+    it is what profiling dashboards and the re-plan tests inspect.
+    """
 
     def __init__(self, name: str, fn: DecisionFn,
-                 fallback: DecisionFn | None = None):
+                 fallback: DecisionFn | None = None, max_history: int = 64):
         self.name = name
         self.fn = fn
         self.fallback = fallback
-        self.history: list[tuple[float, Decision]] = []
+        self.history: deque[tuple[float, Decision]] = deque(maxlen=max_history)
 
     def decide(self, ctx: DecisionContext) -> Decision:
         try:
@@ -169,33 +196,143 @@ def default_node(name: str, func: str = "default") -> DecisionNode:
 class Stage:
     """One stage of a decision workflow: a decision node plus downstream
     function group it controls (the paper: "the scheduling of a group of
-    functions as a decision node")."""
+    functions as a decision node").
+
+    ``depends_on`` orders decisions (upstream stages must have *decided*);
+    ``await_feedback`` late-binds them (the named stages must also have had
+    their runtime feedback folded into the context before this stage may
+    decide). ``None`` means "same as depends_on" — the decision order and
+    the feedback order coincide, which is the common linear case. Pass an
+    explicit subset when a stage's physical work runs *after* a downstream
+    decision (e.g. the exchange decision follows the join decision but both
+    bind on the scan stage's feedback).
+    """
 
     node: DecisionNode
     depends_on: tuple[str, ...] = ()
+    await_feedback: tuple[str, ...] | None = None
+
+    @property
+    def awaits(self) -> tuple[str, ...]:
+        return self.depends_on if self.await_feedback is None \
+            else self.await_feedback
+
+
+class LateBindingError(RuntimeError):
+    """A decision was requested before its awaited feedback arrived."""
+
+
+class WorkflowRun:
+    """One incremental, late-bound evaluation of a workflow.
+
+    Executors drive it between application stages:
+
+        run = workflow.start(ctx)
+        run.decide("scan")              # binds the scan decision
+        ... execute the scan stage ...
+        run.observe(post_scan_dist)     # fold observed data distribution
+        run.feedback("scan", metrics)   # fold runtime feedback (Fig. 5 §4)
+        run.decide("join")              # now sees what the scan produced
+
+    ``decide`` refuses to run a stage whose upstream decisions or awaited
+    feedback are missing — that is the late-binding contract.
+    """
+
+    def __init__(self, workflow: "DecisionWorkflow", ctx: DecisionContext):
+        self.workflow = workflow
+        self.ctx = ctx
+        self.decisions: dict[str, Decision] = {}
+        self.fed: set[str] = set()
+
+    def ready(self) -> list[str]:
+        """Undecided stages whose deps have decided and feedback arrived."""
+        out = []
+        for name in self.workflow.order:
+            if name in self.decisions:
+                continue
+            stage = self.workflow.stages[name]
+            if all(d in self.decisions for d in stage.depends_on) and \
+                    all(f in self.fed for f in stage.awaits):
+                out.append(name)
+        return out
+
+    def decide(self, name: str) -> Decision:
+        stage = self.workflow.stages[name]
+        if name in self.decisions:
+            raise LateBindingError(f"stage {name!r} already decided")
+        undecided = [d for d in stage.depends_on if d not in self.decisions]
+        unfed = [f for f in stage.awaits if f not in self.fed]
+        if undecided or unfed:
+            raise LateBindingError(
+                f"stage {name!r} is not ready: undecided deps {undecided}, "
+                f"awaiting feedback from {unfed}")
+        decision = stage.node.decide(self.ctx)
+        self.decisions[name] = decision
+        self.ctx.decisions = dict(self.ctx.decisions, **{name: decision})
+        return decision
+
+    def feedback(self, name: str, feedback: Mapping | None = None) -> None:
+        """Fold a completed stage's runtime feedback and unblock dependents.
+
+        Keys are merged into ``ctx.profile`` verbatim — callers prefix them
+        (``"scan.seconds"``) when they want namespacing.
+        """
+        if feedback:
+            merged = dict(self.ctx.profile)
+            merged.update(feedback)
+            self.ctx.profile = merged
+        self.fed.add(name)
+
+    def observe(self, dist: DataDist) -> None:
+        """Fold an observed data distribution (e.g. post-filter scan output)
+        into the context so later decisions see actual, not planned, sizes."""
+        merged = dict(self.ctx.data_dist)
+        merged[dist.name] = dist
+        self.ctx.data_dist = merged
+
+    def refresh_status(self, status: NodeStatus) -> None:
+        """Update the resource view so late decisions see current free slots."""
+        self.ctx.node_status = status
+
+    def complete(self) -> bool:
+        return len(self.decisions) == len(self.workflow.stages)
+
+    @property
+    def sequence(self) -> list[tuple[str, Decision]]:
+        """The materialized decision sequence, in binding order."""
+        return list(self.decisions.items())
 
 
 class DecisionWorkflow:
     """A DAG of decision stages evaluated at runtime.
 
-    ``run`` walks stages in topological order, calling a user ``executor``
-    for each resolved decision; executors return runtime feedback that is
-    folded into the context for downstream stages (paper Fig. 5, step 4).
+    ``start`` hands out a ``WorkflowRun`` for incremental, late-bound
+    evaluation interleaved with application stages. ``run`` is the one-shot
+    loop: it walks ready stages in insertion order, calls a user
+    ``executor`` for each resolved decision, and folds the feedback the
+    executor returns into the context for downstream stages (paper Fig. 5,
+    step 4). One workflow may be shared by several planners (simulator and
+    runtime); each ``start`` opens an independent run while the nodes'
+    bounded histories accumulate across runs.
     """
 
     def __init__(self, name: str):
         self.name = name
         self.stages: dict[str, Stage] = {}
         self.order: list[str] = []
+        self.last_run: WorkflowRun | None = None
 
-    def add(self, node: DecisionNode,
-            depends_on: Sequence[str] = ()) -> "DecisionWorkflow":
+    def add(self, node: DecisionNode, depends_on: Sequence[str] = (),
+            await_feedback: Sequence[str] | None = None) -> "DecisionWorkflow":
         missing = [d for d in depends_on if d not in self.stages]
+        missing += [f for f in (await_feedback or ()) if f not in self.stages]
         if missing:
             raise ValueError(f"unknown dependencies {missing} for {node.name}")
         if node.name in self.stages:
             raise ValueError(f"duplicate stage {node.name}")
-        self.stages[node.name] = Stage(node, tuple(depends_on))
+        self.stages[node.name] = Stage(
+            node, tuple(depends_on),
+            None if await_feedback is None else tuple(await_feedback))
         self.order.append(node.name)
         return self
 
@@ -203,24 +340,32 @@ class DecisionWorkflow:
         # insertion order is already valid because add() checks deps exist
         return list(self.order)
 
+    def start(self, ctx: DecisionContext) -> WorkflowRun:
+        self.last_run = WorkflowRun(self, ctx)
+        return self.last_run
+
     def run(self, ctx: DecisionContext,
             executor: Callable[[str, Decision, DecisionContext], Mapping | None],
             ) -> dict[str, Decision]:
-        decisions: dict[str, Decision] = {}
-        for name in self.toposorted():
-            stage = self.stages[name]
-            decision = stage.node.decide(ctx)
-            decisions[name] = decision
-            feedback = executor(name, decision, ctx)
-            if feedback:
-                merged = dict(ctx.profile)
-                merged.update({f"{name}.{k}": v for k, v in feedback.items()})
-                ctx.profile = merged
-        return decisions
+        run = self.start(ctx)
+        while not run.complete():
+            ready = run.ready()
+            if not ready:
+                stuck = [n for n in self.order if n not in run.decisions]
+                raise LateBindingError(
+                    f"workflow {self.name}: stages {stuck} never became "
+                    f"ready (missing feedback?)")
+            for name in ready:
+                decision = run.decide(name)
+                feedback = executor(name, decision, ctx)
+                run.feedback(name, {f"{name}.{k}": v
+                                    for k, v in (feedback or {}).items()})
+        return dict(run.decisions)
 
     def explain(self) -> str:
         lines = [f"DecisionWorkflow({self.name})"]
         for name in self.order:
-            deps = self.stages[name].depends_on
-            lines.append(f"  {name} <- {list(deps) or '[]'}")
+            stage = self.stages[name]
+            lines.append(f"  {name} <- {list(stage.depends_on) or '[]'}"
+                         f" [awaits {list(stage.awaits) or '[]'}]")
         return "\n".join(lines)

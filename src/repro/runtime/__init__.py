@@ -28,4 +28,5 @@ from repro.runtime.executor import (  # noqa: F401
     DAGExecutor,
     Runtime,
     RuntimeStage,
+    StagePlanner,
 )

@@ -1,12 +1,16 @@
-"""DAG executor: decision tuples -> real function invocations.
+"""Dependency-driven DAG executor: decision tuples -> real invocations.
 
 ``RuntimeStage`` is the materialized form of one decision-workflow stage: a
 named group of invocations plus its upstream stage dependencies. The
-executor walks stages in dependency order with a barrier per stage (shuffle
-consumers must see every producer's slice), drives the pluggable invoker,
-and folds per-stage metrics back into the application's private controller
-profile so the *next* decision sees what the last execution cost (paper
-Fig. 5 step 4).
+executor launches any stage whose dependencies are satisfied — under a
+parallel invoker independent stages (e.g. ``scan_fact`` and ``scan_dim``)
+run concurrently — and interleaves decision evaluation with stage
+completion: a ``planner`` callback is invoked as each stage finishes, folds
+the measured metrics and observed output distributions back into its
+decision-workflow context (paper Fig. 5 step 4), binds the next decisions,
+and returns newly materialized stages to extend the DAG mid-query.
+``barrier=True`` restores the legacy one-stage-at-a-time, list-order
+execution (kept as the baseline for the executor benchmark).
 
 ``Runtime`` bundles the store + invoker + metrics behind one handle; several
 applications (private controllers) can share it, contending for slots
@@ -16,7 +20,8 @@ substrate.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from dataclasses import dataclass
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -42,37 +47,130 @@ class RuntimeStage:
     ephemeral_inputs: tuple[str, ...] = ()   # stages to GC once this finishes
 
 
-class DAGExecutor:
-    """Barrier-per-stage DAG driver over an invoker."""
+class StagePlanner:
+    """Protocol for planners that extend the DAG as stages complete.
 
-    def __init__(self, runtime: "Runtime"):
+    ``initial_stages`` materializes the stages known up front;
+    ``on_stage_complete`` is called after each stage finishes (metrics
+    recorded, ephemeral inputs not yet reclaimed) and returns further
+    stages to schedule — typically by binding the next late-bound decisions
+    of a ``WorkflowRun``. Return an empty list when nothing new unlocks.
+    """
+
+    def initial_stages(self) -> list[RuntimeStage]:  # pragma: no cover
+        return []
+
+    def on_stage_complete(self, stage: str, runtime: "Runtime",
+                          pc: PrivateController | None = None,
+                          ) -> list[RuntimeStage]:  # pragma: no cover
+        return []
+
+
+class DAGExecutor:
+    """Dependency-driven stage scheduler over a pluggable invoker."""
+
+    def __init__(self, runtime: "Runtime", barrier: bool = False):
         self.runtime = runtime
+        self.barrier = barrier
 
     def run(self, stages: Sequence[RuntimeStage],
-            pc: PrivateController | None = None) -> dict[str, StageMetrics]:
-        seen: dict[str, RuntimeStage] = {}
-        for stage in stages:
-            missing = [d for d in stage.deps if d not in seen]
-            if missing:
-                raise ValueError(
-                    f"stage {stage.name!r} depends on unknown {missing}")
-            if stage.name in seen:
-                raise ValueError(f"duplicate stage {stage.name!r}")
-            seen[stage.name] = stage
+            pc: PrivateController | None = None,
+            planner: StagePlanner | None = None) -> dict[str, StageMetrics]:
+        known: dict[str, RuntimeStage] = {}
+        pending: dict[str, RuntimeStage] = {}   # insertion-ordered
+        completed: set[str] = set()
 
+        def admit(batch):
+            batch = list(batch or ())
+            for st in batch:
+                if st.name in known:
+                    raise ValueError(f"duplicate stage {st.name!r}")
+                known[st.name] = st
+                pending[st.name] = st
+            for st in batch:
+                missing = [d for d in st.deps if d not in known]
+                if missing:
+                    raise ValueError(
+                        f"stage {st.name!r} depends on unknown {missing}")
+
+        admit(stages)
+        if not known:
+            return {}
+        app = next(st.invocations[0].app for st in known.values()
+                   if st.invocations)
         invoker = self.runtime.invoker
         metrics = self.runtime.metrics
-        app = stages[0].invocations[0].app if stages else ""
-        for stage in stages:
-            dep_invs = tuple(inv.name for d in stage.deps
-                             for inv in seen[d].invocations)
-            invoker.run_stage(stage.invocations, deps=dep_invs)
+
+        def dep_invs(st: RuntimeStage) -> tuple[str, ...]:
+            return tuple(inv.name for d in st.deps
+                         for inv in known[d].invocations)
+
+        def finish(st: RuntimeStage) -> None:
+            completed.add(st.name)
             if pc is not None:
                 pc.record_profile(
-                    **metrics.profile_feedback(app, stage=stage.name))
-            for src in stage.ephemeral_inputs:
+                    **metrics.profile_feedback(app, stage=st.name))
+            if planner is not None:
+                admit(planner.on_stage_complete(st.name, self.runtime, pc))
+            for src in st.ephemeral_inputs:
                 self.runtime.store.delete_stage(app, src)
+
+        if self.barrier or not getattr(invoker, "parallel", False):
+            self._run_serial(pending, completed, invoker, dep_invs, finish)
+        else:
+            self._run_concurrent(pending, completed, invoker, dep_invs,
+                                 finish)
         return metrics.by_stage(app)
+
+    def _run_serial(self, pending, completed, invoker, dep_invs, finish):
+        """One stage at a time. ``barrier`` keeps strict admission order
+        (the legacy executor); otherwise the first *ready* stage runs, so
+        dynamically admitted stages interleave correctly."""
+        while pending:
+            if self.barrier:
+                name = next(iter(pending))
+                blocked = [d for d in pending[name].deps
+                           if d not in completed]
+                if blocked:
+                    raise ValueError(
+                        f"stage {name!r} blocked on incomplete {blocked} "
+                        f"(barrier mode runs stages in admission order)")
+            else:
+                ready = [n for n, st in pending.items()
+                         if all(d in completed for d in st.deps)]
+                if not ready:
+                    raise ValueError(
+                        f"stages {sorted(pending)} blocked on unsatisfied "
+                        f"dependencies")
+                name = ready[0]
+            st = pending.pop(name)
+            invoker.run_stage(st.invocations, deps=dep_invs(st))
+            finish(st)
+
+    def _run_concurrent(self, pending, completed, invoker, dep_invs, finish):
+        """Every ready stage gets a driver thread; completions unlock
+        dependents (and, via the planner, late-bound decisions) while
+        sibling stages are still in flight."""
+        max_drivers = max(2, int(getattr(invoker, "max_workers", 8)))
+        with ThreadPoolExecutor(max_workers=max_drivers) as drivers:
+            in_flight: dict = {}
+            while pending or in_flight:
+                ready = [n for n, st in pending.items()
+                         if all(d in completed for d in st.deps)]
+                for name in ready:
+                    st = pending.pop(name)
+                    fut = drivers.submit(invoker.run_stage, st.invocations,
+                                         deps=dep_invs(st))
+                    in_flight[fut] = st
+                if not in_flight:
+                    raise ValueError(
+                        f"stages {sorted(pending)} blocked on unsatisfied "
+                        f"dependencies")
+                done, _ = wait(in_flight, return_when=FIRST_COMPLETED)
+                for fut in done:
+                    st = in_flight.pop(fut)
+                    fut.result()        # propagate the first failure
+                    finish(st)
 
 
 class Runtime:
@@ -85,9 +183,11 @@ class Runtime:
     def __init__(self, gc: GlobalController,
                  invoker: Invoker | str = "inline",
                  store: ShuffleStore | None = None,
-                 metrics: MetricsSink | None = None, max_workers: int = 8):
+                 metrics: MetricsSink | None = None, max_workers: int = 8,
+                 net_bw: float | None = None, disaggregated: bool = False):
         self.gc = gc
-        self.store = store or ShuffleStore()
+        self.store = store or ShuffleStore(net_bw=net_bw,
+                                           disaggregated=disaggregated)
         self.metrics = metrics or MetricsSink()
         if isinstance(invoker, str):
             if invoker == "inline":
@@ -107,8 +207,11 @@ class Runtime:
         return self.store.ingest(app, stage, partitions)
 
     def execute(self, stages: Sequence[RuntimeStage],
-                pc: PrivateController | None = None) -> dict[str, StageMetrics]:
-        return DAGExecutor(self).run(stages, pc=pc)
+                pc: PrivateController | None = None,
+                planner: StagePlanner | None = None,
+                barrier: bool = False) -> dict[str, StageMetrics]:
+        return DAGExecutor(self, barrier=barrier).run(stages, pc=pc,
+                                                      planner=planner)
 
     def result(self, app: str, stage: str = "result", column: str = "sum",
                ) -> np.ndarray:

@@ -79,6 +79,16 @@ class FnContext:
         return out
 
     def put(self, stage: str, partition: int, table) -> None:
+        # Externalizing state means materializing it: block on the columns so
+        # each invocation pays for its own compute before the blob is
+        # published (otherwise jax's async dispatch defers whole-query work
+        # into whichever downstream reader first forces a value, scrambling
+        # per-stage metrics and stage overlap alike).
+        try:
+            import jax
+            jax.block_until_ready(getattr(table, "columns", None))
+        except ImportError:  # pragma: no cover - jax is a hard dep elsewhere
+            pass
         self.bytes_out += self._store.put(
             self.app, stage, partition, table, self.node, writer=self.writer)
 
@@ -96,7 +106,13 @@ class Invoker:
     ``intercept`` is a fault-injection hook (tests, chaos drills): it runs
     after the slot claim commits and before the function body, i.e. while the
     claim is live and preemptible.
+
+    ``parallel`` advertises whether ``run_stage`` may be driven for several
+    stages concurrently — the dependency-driven executor overlaps
+    independent stages only on parallel backends.
     """
+
+    parallel = False
 
     def __init__(self, gc: GlobalController, store: ShuffleStore,
                  metrics: MetricsSink | None = None, max_attempts: int = 5,
@@ -173,6 +189,8 @@ class InlineInvoker(Invoker):
 
 class ThreadPoolInvoker(Invoker):
     """Real parallelism: one worker per in-flight function instance."""
+
+    parallel = True
 
     def __init__(self, gc: GlobalController, store: ShuffleStore,
                  metrics: MetricsSink | None = None, max_workers: int = 8,

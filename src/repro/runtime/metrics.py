@@ -80,6 +80,22 @@ class MetricsSink:
             m.bytes_out += r.bytes_out
         return out
 
+    def stage_spans(self, app: str | None = None,
+                    ) -> dict[str, tuple[float, float]]:
+        """Wall-clock ``(first_start, last_finish)`` per stage — makes
+        cross-stage overlap visible (the dependency-driven executor runs
+        independent stages concurrently; under the barrier executor spans
+        never intersect)."""
+        out: dict[str, tuple[float, float]] = {}
+        with self._lock:
+            records = list(self.records)
+        for r in records:
+            if app is not None and r.app != app:
+                continue
+            lo, hi = out.get(r.stage, (r.started, r.finished))
+            out[r.stage] = (min(lo, r.started), max(hi, r.finished))
+        return out
+
     def profile_feedback(self, app: str, stage: str | None = None) -> dict:
         """Flat ``{"<stage>.<metric>": value}`` dict ready to merge into
         ``DecisionContext.profile`` via ``PrivateController.record_profile``.

@@ -16,12 +16,11 @@ volumes feed straight back into ``DataDist`` for the decision workflows
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass
 from typing import Mapping
 
-import numpy as np
-
-from repro.core.decisions import DataDist
+from repro.core.decisions import DataDist, partition_skew
 
 
 @dataclass
@@ -39,10 +38,22 @@ class ShuffleStore:
 
     Lifecycle is per-(app, stage): ``delete_stage`` reclaims a stage as soon
     as its consumers finish, ``clear_app`` tears down a whole query's state.
+
+    ``net_bw`` (bytes/s) optionally emulates the transfer cost: cross-node
+    reads block for ``bytes / net_bw`` seconds *outside* the store lock, so
+    under a parallel invoker transfers overlap with other stages' compute —
+    the first-order cost the discrete-event simulator prices with its NIC
+    contention model. With ``disaggregated=True`` the store behaves like the
+    fully external storage tier of Lambada/Pocket: *every* read and write is
+    charged at ``net_bw``, node-locality earns no discount. ``None``
+    (default) keeps all store traffic instantaneous.
     """
 
-    def __init__(self):
+    def __init__(self, net_bw: float | None = None,
+                 disaggregated: bool = False):
         self._lock = threading.RLock()
+        self.net_bw = net_bw
+        self.disaggregated = disaggregated
         # (app, stage) -> partition -> writer -> Blob
         self._stages: dict[tuple[str, str], dict[int, dict[str, Blob]]] = {}
         self.resident_bytes: dict[int, int] = {}   # node -> live blob bytes
@@ -60,6 +71,8 @@ class ShuffleStore:
         Returns the bytes written.
         """
         nbytes, rows = int(table.nbytes), int(table.num_rows)
+        if self.disaggregated and self.net_bw and writer != "seed":
+            time.sleep(nbytes / self.net_bw)
         with self._lock:
             parts = self._stages.setdefault((app, stage), {})
             blobs = parts.setdefault(partition, {})
@@ -93,6 +106,7 @@ class ShuffleStore:
         content is deterministic under concurrent invokers). Remote reads are
         charged to the blob's home node — this is the shuffle/broadcast
         traffic the simulator's NIC model prices. Returns None if absent."""
+        remote = 0
         with self._lock:
             blobs = self._stages.get((app, stage), {}).get(partition)
             if not blobs:
@@ -103,9 +117,14 @@ class ShuffleStore:
                     self.read_bytes[node] = \
                         self.read_bytes.get(node, 0) + blob.nbytes
                     if blob.node != node:
+                        remote += blob.nbytes
                         self.sent_bytes[blob.node] = \
                             self.sent_bytes.get(blob.node, 0) + blob.nbytes
                         self.cross_node_bytes += blob.nbytes
+        charged = sum(b.nbytes for b in ordered) if self.disaggregated \
+            else remote
+        if account and charged and self.net_bw:
+            time.sleep(charged / self.net_bw)
         out = ordered[0].table
         for blob in ordered[1:]:
             out = out.concat(blob.table)
@@ -148,11 +167,8 @@ class ShuffleStore:
                 for b in blobs.values():
                     per_node[b.node] = per_node.get(b.node, 0) + b.nbytes
                     total_rows += b.rows
-        sizes = np.array(rows_per_part, dtype=np.float64)
-        skew = float(sizes.max() / max(sizes.mean(), 1e-9)) if len(sizes) \
-            else 0.0
         return DataDist(name or f"{app}/{stage}", per_node,
-                        rows=total_rows, skew=skew)
+                        rows=total_rows, skew=partition_skew(rows_per_part))
 
     # -- lifecycle -------------------------------------------------------------
 

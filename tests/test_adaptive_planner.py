@@ -1,0 +1,402 @@
+"""Workflow-driven adaptive planner + dependency-driven executor.
+
+The tentpole behaviors: late-bound decisions that see runtime feedback
+(join flip on observed post-filter distribution), one workflow shared by
+both data planes (identical decision sequences), dependency-driven stage
+scheduling (overlap, out-of-list-order execution), and preemption-retry of
+whole queries under the threads invoker.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analytics import (
+    QueryStrategy,
+    Table,
+    build_query_workflow,
+    estimate_scan_output,
+    execute_query_runtime,
+    make_cluster,
+    plan_query_tasks,
+    reference_query_numpy,
+    synth_table,
+)
+from repro.analytics.decisions import T1, T2, join_decision
+from repro.analytics.planner import AdaptiveQueryPlan
+from repro.core.controllers import GlobalController, PrivateController
+from repro.core.decisions import (
+    Decision,
+    DecisionContext,
+    DecisionNode,
+    DecisionWorkflow,
+    LateBindingError,
+    Schedule,
+)
+from repro.runtime import InlineInvoker, MetricsSink, Runtime, ShuffleStore
+
+
+def make_dist_tables(rows=4096, keyspace=2048, dim_rows=512,
+                     fact_nodes=4, dim_nodes=2, seed=1):
+    from repro.analytics.table import distribute
+    fact = synth_table("f", rows, keyspace, seed=seed)
+    dimc = synth_table("d", dim_rows, keyspace, seed=seed + 1,
+                       unique_keys=True)
+    dim = Table({**dimc.columns,
+                 "cat": jnp.arange(dim_rows, dtype=jnp.int32) % 64})
+    ref = reference_query_numpy(fact, dim)
+    return (distribute(fact, range(fact_nodes), "A"),
+            distribute(dim, range(dim_nodes), "B"), ref)
+
+
+# -- core: late-bound workflow evaluation -----------------------------------------
+
+
+def _const_node(name, func="f"):
+    return DecisionNode(
+        name, lambda ctx: Decision(func, 1, Schedule("round-robin", (0,))))
+
+
+def test_workflow_run_enforces_late_binding():
+    wf = DecisionWorkflow("q")
+    wf.add(_const_node("a")).add(_const_node("b"), depends_on=("a",))
+    run = wf.start(DecisionContext())
+    with pytest.raises(LateBindingError):
+        run.decide("b")                      # upstream not decided/fed yet
+    run.decide("a")
+    with pytest.raises(LateBindingError):
+        run.decide("b")                      # decided but feedback not folded
+    run.feedback("a", {"a.seconds": 1.0})
+    d = run.decide("b")
+    assert d.func == "f"
+    assert run.ctx.profile["a.seconds"] == 1.0
+    assert run.complete()
+    with pytest.raises(LateBindingError):
+        run.decide("a")                      # no double-binding
+
+
+def test_workflow_await_feedback_decouples_decision_order():
+    """A stage may depend on an upstream *decision* while awaiting feedback
+    from an earlier stage only (exchange-follows-join pattern)."""
+    wf = DecisionWorkflow("q")
+    wf.add(_const_node("scan"))
+    wf.add(_const_node("join"), depends_on=("scan",))
+    wf.add(_const_node("exchange"), depends_on=("join",),
+           await_feedback=("scan",))
+    run = wf.start(DecisionContext())
+    run.decide("scan")
+    run.feedback("scan")
+    run.decide("join")
+    # join's own feedback never arrives, yet exchange is ready:
+    assert "exchange" in run.ready()
+    run.decide("exchange")
+    assert run.complete()
+
+
+def test_decision_node_history_is_bounded():
+    node = _const_node("n")
+    for _ in range(200):
+        node.decide(DecisionContext())
+    assert len(node.history) == 64
+    small = DecisionNode("s", lambda ctx: Decision("f", 1,
+                                                   Schedule("round-robin", ())),
+                         max_history=3)
+    for _ in range(10):
+        small.decide(DecisionContext())
+    assert len(small.history) == 3
+
+
+def test_decisions_visible_to_downstream_nodes():
+    wf = DecisionWorkflow("q")
+    wf.add(_const_node("a", func="hash_join"))
+    seen = {}
+
+    def fn(ctx):
+        seen["a"] = ctx.decisions["a"].func
+        return Decision("x", 1, Schedule("round-robin", (0,)))
+
+    wf.add(DecisionNode("b", fn), depends_on=("a",))
+    run = wf.start(DecisionContext())
+    run.decide("a")
+    run.feedback("a")
+    run.decide("b")
+    assert seen["a"] == "hash_join"
+
+
+# -- the flip: a decision impossible under up-front planning ----------------------
+
+
+def _selective_tables(rows=20000, dim_rows=1100, keyspace=4096,
+                      fact_nodes=10, keep=0.05, seed=0):
+    """Fact whose filter keeps ~``keep`` of rows, spread over many nodes:
+    the raw size ratio is above T1 (up-front Fig. 6 says hash_join), the
+    post-filter ratio is far below T1 on a >T2-node cluster (merge_join)."""
+    from repro.analytics.table import distribute
+    rng = np.random.default_rng(seed)
+    fact = synth_table("f", rows, keyspace, seed=seed + 1)
+    v0 = np.asarray(fact["v0"])
+    v0 = np.where(rng.random(rows) < keep, np.abs(v0) + 0.1,
+                  -np.abs(v0) - 0.1)
+    fact = Table({**fact.columns, "v0": jnp.asarray(v0, jnp.float32)})
+    dimc = synth_table("d", dim_rows, keyspace, seed=seed + 2,
+                       unique_keys=True)
+    dim = Table({**dimc.columns,
+                 "cat": jnp.arange(dim_rows, dtype=jnp.int32) % 64})
+    ref = reference_query_numpy(fact, dim)
+    return (distribute(fact, range(fact_nodes), "A"),
+            distribute(dim, range(2), "B"), ref)
+
+
+def test_join_node_flips_on_observed_post_filter_distribution():
+    fd, dd, ref = _selective_tables()
+    gc = GlobalController({n: 8 for n in range(10)})
+
+    # up-front planning (the old path): raw sizes say hash_join
+    raw_ctx = DecisionContext(
+        data_dist={"A": fd.data_dist(), "B": dd.data_dist()},
+        node_status=gc.node_status())
+    assert fd.nbytes / dd.nbytes >= T1 and len(fd.partitions) > T2
+    assert join_decision(raw_ctx).func == "hash_join"
+
+    # late-bound workflow: the join node sees the observed post-filter
+    # distribution from the scan stage and flips to merge_join mid-query
+    wf = build_query_workflow(QueryStrategy("dynamic_fig6"),
+                              consolidate_threshold=0)
+    got, runtime = execute_query_runtime(
+        fd, dd, QueryStrategy("dynamic_fig6"), gc=gc, workflow=wf)
+    run = wf.last_run
+    assert run.decisions["join"].func == "merge_join"
+    scanned = run.ctx.data_dist["A_scanned"]
+    assert scanned.size < fd.nbytes / 5          # the filter really shrank A
+    assert scanned.size / dd.nbytes < T1
+    # and the adapted plan is still correct
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    # the decision sequence shows the full per-phase workflow
+    assert [name for name, _ in run.sequence] == \
+        ["scan", "join", "exchange", "aggregate"]
+    assert run.decisions["exchange"].func == "shuffle"
+
+
+def test_workflow_with_explicit_threshold_rejected():
+    """The consolidation threshold is baked into the workflow at build
+    time; passing both is a contradiction, not a merge."""
+    fd, dd, _ = make_dist_tables()
+    wf = build_query_workflow(QueryStrategy("dynamic_fig6"))
+    with pytest.raises(ValueError, match="consolidate_threshold"):
+        execute_query_runtime(fd, dd, QueryStrategy("dynamic_fig6"),
+                              workflow=wf, consolidate_threshold=0)
+
+
+def test_consolidated_sequence_matches_materialized_plan():
+    """Under Fig. 7's consolidation the recorded decisions are exactly what
+    runs: hash join packed onto the data-heaviest node, broadcast exchange
+    — never a phantom merge/shuffle sequence."""
+    fd, dd, ref = make_dist_tables()       # tiny input -> fig6 consolidates
+    wf = build_query_workflow(QueryStrategy("dynamic_fig6"))
+    got, rt = execute_query_runtime(fd, dd, QueryStrategy("dynamic_fig6"),
+                                    workflow=wf)
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    run = wf.last_run
+    join_d = run.decisions["join"]
+    assert join_d.extra("consolidate") and join_d.func == "hash_join"
+    assert join_d.schedule.policy == "packing"
+    assert run.decisions["exchange"].func == "broadcast"
+    target = join_d.schedule.nodes[0]
+    recs = [r for r in rt.metrics.records
+            if r.stage in ("join", "partial_agg", "final_agg")]
+    assert recs and all(r.node == target for r in recs)
+
+
+# -- one workflow, two data planes: identical decision sequences ------------------
+
+
+def test_simulator_and_runtime_share_identical_decision_sequences():
+    fd, dd, ref = make_dist_tables()
+    wf = build_query_workflow(QueryStrategy("dynamic_fig6"))
+
+    gc_rt = GlobalController({n: 8 for n in range(4)})
+    got, _ = execute_query_runtime(fd, dd, QueryStrategy("dynamic_fig6"),
+                                   gc=gc_rt, workflow=wf)
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    seq_runtime = list(wf.last_run.sequence)
+
+    gc_sim, sim = make_cluster(4)
+    pc = PrivateController("query", gc_sim, priority=10)
+    plan_query_tasks(sim, pc, fd, dd, QueryStrategy("dynamic_fig6"),
+                     workflow=wf)
+    seq_sim = list(wf.last_run.sequence)
+    out = sim.run()
+    assert out["completion"]["query"] > 0
+
+    # full Decision equality, stage by stage, in binding order
+    assert seq_runtime == seq_sim
+    # both runs flowed through the same nodes (bounded shared history)
+    assert len(wf.stages["join"].node.history) == 2
+
+
+def test_estimated_scan_output_matches_observed_store_distribution():
+    """The simulator's scan estimate is byte-for-byte the runtime's observed
+    post-filter store state — that is what makes shared-workflow decision
+    sequences identical across planes."""
+    fd, dd, _ = make_dist_tables(seed=9)
+    est = estimate_scan_output(fd)
+    _, runtime = execute_query_runtime(fd, dd, QueryStrategy("static_hash"))
+    obs = runtime.store.data_dist("query", "scan_fact", name="A_scanned")
+    assert dict(est.bytes_per_node) == dict(obs.bytes_per_node)
+    assert est.rows == obs.rows
+    assert est.skew == pytest.approx(obs.skew)
+
+
+# -- dependency-driven executor ---------------------------------------------------
+
+
+def test_dependency_executor_runs_stages_out_of_list_order():
+    """Stages given in scrambled order execute by dependency, not position
+    (the barrier executor would refuse this list)."""
+    from repro.analytics.planner import scan_stages, tail_stages
+    fd, dd, ref = make_dist_tables(seed=3)
+    gc = GlobalController({n: 8 for n in range(4)})
+    runtime = Runtime(gc)
+    fl = runtime.seed("query", "input/fact", fd.partitions)
+    dl = runtime.seed("query", "input/dim", dd.partitions)
+    decision = Decision("hash_join", 4,
+                        Schedule("round-robin", (0, 1, 2, 3)))
+    stages = scan_stages("query", fl, dl, 10) + tail_stages(
+        "query", fl, dl, decision, fd.data_dist(), priority=10)
+    scrambled = list(reversed(stages))
+    with pytest.raises(ValueError, match="barrier mode"):
+        runtime.execute(scrambled, barrier=True)
+    gc2 = GlobalController({n: 8 for n in range(4)})
+    runtime2 = Runtime(gc2)
+    runtime2.seed("query", "input/fact", fd.partitions)
+    runtime2.seed("query", "input/dim", dd.partitions)
+    runtime2.execute(scrambled)
+    np.testing.assert_allclose(runtime2.result("query"), ref, atol=1e-3)
+
+
+def test_threads_executor_overlaps_independent_scan_stages():
+    """scan_fact and scan_dim are independent: under the dependency-driven
+    executor with the threads invoker their wall-clock spans intersect;
+    the barrier executor strictly serializes them. The disaggregated store
+    stretches each scan with (GIL-releasing) transfer time so the overlap
+    is deterministic."""
+    fd, dd, ref = make_dist_tables(rows=1 << 15, keyspace=1 << 14,
+                                   dim_rows=1 << 12, seed=4)
+
+    def run(barrier):
+        gc = GlobalController({n: 8 for n in range(4)})
+        rt = Runtime(gc, invoker="threads", net_bw=20e6, disaggregated=True)
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_hash"),
+                                       runtime=rt, barrier=barrier)
+        np.testing.assert_allclose(got, ref, atol=1e-3)
+        return rt.metrics.stage_spans("query")
+
+    spans = run(barrier=False)
+    assert spans["scan_dim"][0] < spans["scan_fact"][1]
+    spans2 = run(barrier=True)
+    assert spans2["scan_dim"][0] >= spans2["scan_fact"][1]
+
+
+@pytest.mark.parametrize("strat", ("static_merge", "static_hash",
+                                   "dynamic", "dynamic_fig6"))
+def test_adaptive_plan_threads_matches_oracle(strat):
+    fd, dd, ref = make_dist_tables(seed=6)
+    got, rt = execute_query_runtime(fd, dd, QueryStrategy(strat),
+                                    invoker="threads")
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    assert sum(rt.gc.used.values()) == 0
+
+
+def test_disaggregated_store_charges_all_traffic():
+    store = ShuffleStore(net_bw=200e9, disaggregated=True)
+    t = synth_table("t", 256, 512, seed=0)
+    store.put("app", "s", 0, t, node=0, writer="w")
+    assert store.get("app", "s", 0, node=0) is not None   # local read sleeps too
+    fd, dd, ref = make_dist_tables(seed=8)
+    gc = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc, invoker="threads", net_bw=500e6, disaggregated=True)
+    got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"),
+                                   runtime=rt)
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+
+
+# -- preemption-retry of a whole query under the threads invoker ------------------
+
+
+def test_high_priority_query_preempts_low_priority_mid_stage_threads():
+    """A high-priority query arriving mid-stage preempts in-flight
+    low-priority invocations on the contended nodes; retries heal the
+    low-priority query and both results stay oracle-correct."""
+    from repro.runtime import ThreadPoolInvoker
+
+    lo_fd, lo_dd, lo_ref = make_dist_tables(rows=2048, keyspace=1024,
+                                            fact_nodes=2, dim_nodes=2,
+                                            seed=11)
+    hi_fd, hi_dd, hi_ref = make_dist_tables(rows=1024, keyspace=512,
+                                            dim_rows=128, fact_nodes=2,
+                                            dim_nodes=2, seed=12)
+    # warm the hi query's kernel shapes on an uncontended cluster so the
+    # contended run below is quick (bounds the lo query's retry budget)
+    execute_query_runtime(hi_fd, hi_dd, QueryStrategy("static_hash"),
+                          gc=GlobalController({0: 8, 1: 8}), app="hi")
+
+    gc = GlobalController({0: 1, 1: 1})          # one slot per node
+    fire_once = threading.Lock()
+    hi_result = {}
+
+    def urgent_arrival(inv, attempt):
+        # first join invocation of the low-priority query: a high-priority
+        # query arrives on the shared cluster and runs to completion,
+        # preempting the in-flight low-priority claims
+        if inv.stage == "join" and not hi_result and \
+                fire_once.acquire(blocking=False):
+            hi_rt = Runtime(gc, invoker="inline")
+            got, _ = execute_query_runtime(
+                hi_fd, hi_dd, QueryStrategy("static_hash"), runtime=hi_rt,
+                app="hi", priority=99)
+            hi_result["sums"] = got
+
+    store, metrics = ShuffleStore(), MetricsSink()
+    invoker = ThreadPoolInvoker(gc, store, metrics, max_workers=4,
+                                max_attempts=2000,
+                                intercept=urgent_arrival)
+    lo_rt = Runtime(gc, invoker=invoker, store=store, metrics=metrics)
+    lo_got, _ = execute_query_runtime(
+        lo_fd, lo_dd, QueryStrategy("static_hash"), runtime=lo_rt,
+        app="lo", priority=0)
+
+    np.testing.assert_allclose(lo_got, lo_ref, atol=1e-3)   # retries healed
+    np.testing.assert_allclose(hi_result["sums"], hi_ref, atol=1e-3)
+    assert any(p.victim.priority == 0 and p.victim.app == "lo"
+               for p in gc.preemptions)
+    preempted = [r for r in metrics.records
+                 if r.app == "lo" and r.status == "preempted"]
+    assert preempted
+    for rec in preempted:      # every preempted invocation later succeeded
+        assert any(r.name == rec.name and r.status == "ok"
+                   and r.attempt > rec.attempt for r in metrics.records)
+    assert sum(gc.used.values()) == 0
+
+
+# -- controller listener thread-safety --------------------------------------------
+
+
+def test_subscribe_during_notification_is_safe():
+    gc = GlobalController({0: 2})
+    events = []
+
+    def late(ev, claim):
+        events.append(("late", ev))
+
+    def listener(ev, claim):
+        events.append(("first", ev))
+        if ev == "commit":
+            gc.subscribe(late)          # mutates listener list mid-notify
+
+    gc.subscribe(listener)
+    claim = gc.commit("app", 1, [0])
+    gc.release(claim)
+    assert ("first", "commit") in events
+    assert ("late", "release") in events
