@@ -30,6 +30,7 @@ NET_BW = 100e6            # bytes/s per function <-> storage link
 ROWS, DIM_ROWS = 1 << 19, 1 << 18
 SMOKE_ROWS, SMOKE_DIM_ROWS = 1 << 12, 1 << 11
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_executor.json"
+SMOKE_OUT_PATH = OUT_PATH.with_name("BENCH_executor_smoke.json")
 
 
 def _pin_xla_single_thread() -> None:
@@ -40,21 +41,12 @@ def _pin_xla_single_thread() -> None:
 
 
 def _make_tables(rows: int, dim_rows: int):
-    import jax.numpy as jnp
+    from repro.analytics import synth_query_tables
 
-    from repro.analytics import Table, reference_query_numpy, synth_table
-    from repro.analytics.table import distribute
-
-    keyspace = 2 * max(rows, dim_rows)
-    fact = synth_table("f", rows, keyspace, seed=1)
-    dimc = synth_table("d", dim_rows, keyspace, seed=2, unique_keys=True)
-    dim = Table({**dimc.columns,
-                 "cat": jnp.arange(dim_rows, dtype=jnp.int32) % 64})
-    ref = reference_query_numpy(fact, dim)
     # fact on nodes {0,1}, dim on {2,3}: scans and exchanges of the two
     # sides are fully independent stages on a 4-node cluster
-    return (distribute(fact, range(2), "A"),
-            distribute(dim, [2, 3], "B"), ref)
+    return synth_query_tables(rows, dim_rows, seed=1, fact_nodes=range(2),
+                              dim_nodes=[2, 3])
 
 
 def _run_once(fd, dd, strategy: str, barrier: bool):
@@ -73,11 +65,14 @@ def _run_once(fd, dd, strategy: str, barrier: bool):
 
 
 def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
-         out_path: Path | str = OUT_PATH) -> dict:
+         out_path: Path | str | None = None) -> dict:
     import numpy as np
 
     own = rows is None
     rows = [] if own else rows
+    if out_path is None:
+        # smoke runs must not clobber the committed full-run artifact
+        out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
     n_rows, n_dim = (SMOKE_ROWS, SMOKE_DIM_ROWS) if smoke \
         else (ROWS, DIM_ROWS)
     fd, dd, ref = _make_tables(n_rows, n_dim)
@@ -128,7 +123,9 @@ if __name__ == "__main__":
                     help="tiny tables, 1 rep (CI: exercises the "
                          "dependency-driven path, no perf claim)")
     ap.add_argument("--reps", type=int, default=None)
-    ap.add_argument("--out", default=str(OUT_PATH))
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_executor.json, or "
+                         "BENCH_executor_smoke.json under --smoke)")
     args = ap.parse_args()
     _pin_xla_single_thread()
     main(smoke=args.smoke,

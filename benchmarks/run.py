@@ -1,7 +1,8 @@
 """Benchmark aggregator — one section per paper table/figure plus the
 roofline report. Prints ``name,us_per_call,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig4|fig7|fig8|roofline]
+    PYTHONPATH=src python -m benchmarks.run \
+        [--only fig4|fig7|fig8|roofline|executor|sharing]
 """
 
 from __future__ import annotations
@@ -14,6 +15,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks import (
     bench_executor,
+    bench_sharing,
     fig4_join,
     fig7_query,
     fig8_sharing,
@@ -24,7 +26,8 @@ from benchmarks import (
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig4", "fig7", "fig8", "roofline", "executor"])
+                    choices=["fig4", "fig7", "fig8", "roofline", "executor",
+                             "sharing"])
     args = ap.parse_args(argv)
 
     sections = {
@@ -33,6 +36,7 @@ def main(argv=None) -> None:
         "fig8": fig8_sharing.main,
         "roofline": roofline.main,
         "executor": bench_executor.main,
+        "sharing": bench_sharing.main,
     }
     if args.only:
         sections = {args.only: sections[args.only]}

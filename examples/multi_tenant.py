@@ -8,27 +8,28 @@ tenants share the function slots, the shuffle store, and the global
 controller — slot claims from the two apps interleave through the same
 Omega-style commit path the simulator models.
 
+Part 3 drives a six-query mixed workload through the ``QueryScheduler``:
+FIFO head-of-line blocking vs weighted fair-share slot rationing, with a
+store quota capping one tenant's live shuffle footprint.
+
     PYTHONPATH=src python examples/multi_tenant.py
 """
 
 import threading
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.analytics import (
     QueryStrategy,
-    Table,
     execute_query_runtime,
     make_cluster,
     plan_query_tasks,
-    reference_query_numpy,
-    synth_table,
+    synth_query_tables,
 )
 from repro.analytics.simulator import SimTask
-from repro.analytics.table import distribute, phantom
+from repro.analytics.table import phantom
 from repro.core.controllers import GlobalController, PrivateController
-from repro.runtime import Runtime
+from repro.runtime import QueryJob, QueryScheduler, Runtime
 
 GB = 1 << 30
 
@@ -58,13 +59,8 @@ def run_two_queries_one_runtime():
     runtime = Runtime(gc, invoker="threads", max_workers=8)
 
     def make_query(seed):
-        fact = synth_table("fact", 1 << 13, 1 << 11, seed=seed)
-        dimc = synth_table("dim", 1 << 8, 1 << 11, seed=seed + 1,
-                           unique_keys=True)
-        dim = Table({**dimc.columns,
-                     "cat": jnp.arange(1 << 8, dtype=jnp.int32) % 64})
-        return (distribute(fact, range(4), "A"), distribute(dim, range(2), "B"),
-                reference_query_numpy(fact, dim))
+        return synth_query_tables(1 << 13, 1 << 8, keyspace=1 << 11,
+                                  seed=seed)
 
     tenants = {"etl_hi": (10, "dynamic", make_query(11)),
                "adhoc_lo": (0, "static_hash", make_query(23))}
@@ -101,6 +97,44 @@ def run_two_queries_one_runtime():
           f"retried: {preempted}")
 
 
+def run_scheduled_mix():
+    """Part 3: a mixed workload under FIFO vs weighted fair-share."""
+    queries = [synth_query_tables(1 << 15, 1 << 9, keyspace=1 << 12,
+                                  seed=100 + 7 * i)
+               for i in range(6)]
+    # warm the kernels once so the policy comparison measures scheduling,
+    # not which policy happened to pay XLA compilation first
+    for i, (fd, dd, _) in enumerate(queries):
+        execute_query_runtime(
+            fd, dd,
+            QueryStrategy(["static_hash", "dynamic", "static_merge"][i % 3]),
+            gc=GlobalController({n: 4 for n in range(4)}), app=f"warm{i}")
+    print("\nsix-query mix through the QueryScheduler "
+          "(lo,hi alternating arrivals):")
+    for policy in ("fifo", "fair_share"):
+        # 2 slots/node + disaggregated store (5 MB/s): function slots are
+        # the contended resource, which is what the policies ration
+        gc = GlobalController({n: 2 for n in range(4)})
+        runtime = Runtime(gc, invoker="threads", max_workers=8,
+                          net_bw=5e6, disaggregated=True)
+        sched = QueryScheduler(runtime, policy=policy)
+        for i, (fd, dd, _) in enumerate(queries):
+            sched.submit(QueryJob(
+                f"q{i}", fd, dd,
+                ["static_hash", "dynamic", "static_merge"][i % 3],
+                priority=10 if i % 2 else 0,
+                quota=64 << 20 if i == 0 else None))
+        results = sched.run()
+        for i, (_, _, ref) in enumerate(queries):
+            res = results[f"q{i}"]
+            assert res.ok, res.error
+            assert np.abs(res.sums - ref).max() < 1e-3, f"q{i}"
+        hi = sched.latencies(min_priority=10)
+        print(f"  {policy:10s} makespan {sched.makespan():6.2f}s  "
+              f"hi-prio latency p50 {hi[len(hi) // 2]:5.2f}s  "
+              f"worst {hi[-1]:5.2f}s")
+
+
 def main():
     t_solo, alloc_solo, _ = run(False)
     t_shared, alloc_shared, gc = run(True)
@@ -114,6 +148,7 @@ def main():
           f"{len(gc.preemptions)}")
     assert t_shared <= t_solo * 1.25, "background must not hurt the query"
     run_two_queries_one_runtime()
+    run_scheduled_mix()
 
 
 if __name__ == "__main__":

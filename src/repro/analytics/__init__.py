@@ -28,6 +28,8 @@ from repro.analytics.query import (  # noqa: F401
     execute_query_runtime,
     plan_query_tasks,
     plan_runtime_stages,
+    prepare_query_plan,
     reference_query_numpy,
     resolve_join_decision,
+    synth_query_tables,
 )

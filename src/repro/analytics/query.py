@@ -37,7 +37,7 @@ from repro.analytics.planner import (
     tail_stages,
 )
 from repro.analytics.simulator import ClusterSim
-from repro.analytics.table import DistTable, Table
+from repro.analytics.table import DistTable, Table, distribute, synth_table
 from repro.core.controllers import GlobalController, PrivateController
 from repro.core.decisions import (
     DataDist,
@@ -46,6 +46,31 @@ from repro.core.decisions import (
     DecisionWorkflow,
     Schedule,
 )
+
+def synth_query_tables(rows: int = 4096, dim_rows: int = 512,
+                       keyspace: int | None = None, seed: int = 1,
+                       fact_nodes=4, dim_nodes=2, num_groups: int = 64,
+                       ) -> tuple[DistTable, DistTable, np.ndarray]:
+    """Synthetic fact/dim pair + numpy oracle for the TPC-DS-like sub-query.
+
+    The one workload builder shared by benchmarks, examples and tests (the
+    ``cat`` cardinality must match ``num_groups`` — keeping it here stops
+    the copies drifting). ``fact_nodes``/``dim_nodes`` take a node count
+    (placed on ``0..n-1``) or an explicit node iterable; the dim table uses
+    ``seed + 1``. Returns ``(fact, dim, reference_sums)``.
+    """
+    ks = keyspace if keyspace is not None else 2 * max(rows, dim_rows)
+    fact = synth_table("f", rows, ks, seed=seed)
+    dimc = synth_table("d", dim_rows, ks, seed=seed + 1, unique_keys=True)
+    dim = Table({**dimc.columns,
+                 "cat": jnp.arange(dim_rows, dtype=jnp.int32) % num_groups})
+    ref = reference_query_numpy(fact, dim, num_groups=num_groups)
+    fact_nodes = range(fact_nodes) if isinstance(fact_nodes, int) \
+        else fact_nodes
+    dim_nodes = range(dim_nodes) if isinstance(dim_nodes, int) else dim_nodes
+    return (distribute(fact, fact_nodes, "A"),
+            distribute(dim, dim_nodes, "B"), ref)
+
 
 @dataclass
 class QueryStrategy:
@@ -119,6 +144,41 @@ def plan_runtime_stages(app: str, fact_layout: Sequence[tuple[int, int]],
         consolidated=consolidated, num_groups=num_groups, priority=priority)
 
 
+def prepare_query_plan(runtime, fact: DistTable, dim: DistTable,
+                       strategy: QueryStrategy, app: str = "query",
+                       priority: int = 10, num_groups: int = 64,
+                       pc: PrivateController | None = None,
+                       consolidate_threshold: int | None = None,
+                       workflow: DecisionWorkflow | None = None,
+                       ) -> tuple[AdaptiveQueryPlan, PrivateController]:
+    """Planner entry point for a *named* application on a shared runtime.
+
+    Observes the input distributions, opens the query's own late-bound
+    ``WorkflowRun``, seeds the inputs into the shared store under ``app``'s
+    namespace, and returns the ``AdaptiveQueryPlan`` (plus the private
+    controller) ready for ``runtime.execute``. Several apps prepared against
+    one runtime can then be driven concurrently — this is what
+    ``repro.runtime.scheduler.QueryScheduler`` admits per query.
+    """
+    if pc is None:
+        pc = PrivateController(app, runtime.gc, priority=priority)
+
+    dist_f, dist_d = fact.data_dist(), dim.data_dist()
+    pc.observe_data(dist_f)
+    pc.observe_data(dist_d)
+    wf = _resolve_workflow(workflow, strategy, consolidate_threshold)
+    ctx = DecisionContext(
+        data_dist={"A": dist_f, "B": dist_d},
+        node_status=runtime.gc.node_status(), profile=dict(pc.profile))
+    run = wf.start(ctx)
+
+    fact_layout = runtime.seed(app, "input/fact", fact.partitions)
+    dim_layout = runtime.seed(app, "input/dim", dim.partitions)
+    plan = AdaptiveQueryPlan(run, app, fact_layout, dim_layout,
+                             num_groups=num_groups, priority=pc.priority)
+    return plan, pc
+
+
 def execute_query_runtime(fact: DistTable, dim: DistTable,
                           strategy: QueryStrategy, runtime=None,
                           gc: GlobalController | None = None,
@@ -146,22 +206,10 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
             nodes = sorted(set(fact.partitions) | set(dim.partitions))
             gc = GlobalController({n: 8 for n in nodes})
         runtime = Runtime(gc, invoker=invoker)
-    if pc is None:
-        pc = PrivateController(app, runtime.gc, priority=priority)
-
-    dist_f, dist_d = fact.data_dist(), dim.data_dist()
-    pc.observe_data(dist_f)
-    pc.observe_data(dist_d)
-    wf = _resolve_workflow(workflow, strategy, consolidate_threshold)
-    ctx = DecisionContext(
-        data_dist={"A": dist_f, "B": dist_d},
-        node_status=runtime.gc.node_status(), profile=dict(pc.profile))
-    run = wf.start(ctx)
-
-    fact_layout = runtime.seed(app, "input/fact", fact.partitions)
-    dim_layout = runtime.seed(app, "input/dim", dim.partitions)
-    plan = AdaptiveQueryPlan(run, app, fact_layout, dim_layout,
-                             num_groups=num_groups, priority=pc.priority)
+    plan, pc = prepare_query_plan(
+        runtime, fact, dim, strategy, app=app, priority=priority,
+        num_groups=num_groups, pc=pc,
+        consolidate_threshold=consolidate_threshold, workflow=workflow)
     runtime.execute(plan.initial_stages(), pc=pc, planner=plan,
                     barrier=barrier)
     return runtime.result(app), runtime

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Mapping, Sequence
 
@@ -79,6 +80,14 @@ class GlobalController:
         self.preemptions: list[Preemption] = []
         self._ids = itertools.count(1)
         self._listeners: list[Callable[[str, Claim], None]] = []
+        # Release-event machinery for starved claimants: every slot release
+        # bumps the released nodes' epochs (and a global one) and wakes
+        # waiters, so a failed try_commit can block until capacity may have
+        # freed on *its* node instead of busy-spinning — and without burning
+        # retry attempts on unrelated nodes' churn.
+        self._release_cond = threading.Condition(self._lock)
+        self._release_epoch = 0
+        self._node_release_epoch: dict[int, int] = {n: 0 for n in self.total}
 
     # -- resource view offered to private controllers (all or parts) --------
 
@@ -122,6 +131,7 @@ class GlobalController:
         preempting every lower-priority claim on the contended nodes.
         """
         evicted: list[Claim] = []
+        claim: Claim | None = None
         try:
             with self._lock:
                 demand: dict[int, int] = {}
@@ -155,10 +165,20 @@ class GlobalController:
                 self.claims[claim.claim_id] = claim
         finally:
             # Notifications fire outside the lock: a blocking or re-entrant
-            # listener must not stall every other thread's slot traffic.
-            for victim in evicted:
-                self._notify("release", victim)
-        self._notify("commit", claim)
+            # listener must not stall every other thread's slot traffic. A
+            # *raising* listener must not leak the booked claim either — the
+            # caller gets the exception instead of the claim handle, so the
+            # booking is rolled back before propagating.
+            try:
+                for victim in evicted:
+                    self._notify("release", victim)
+                if claim is not None:
+                    self._notify("commit", claim)
+            except BaseException:
+                if claim is not None:
+                    with self._lock:
+                        self._release_locked(claim)
+                raise
         return claim
 
     # -- invoker-facing claim path ------------------------------------------
@@ -203,7 +223,45 @@ class GlobalController:
         del self.claims[claim.claim_id]
         for node, count in claim.slots_per_node().items():
             self.used[node] -= count
+            self._node_release_epoch[node] = \
+                self._node_release_epoch.get(node, 0) + 1
+        self._release_epoch += 1
+        self._release_cond.notify_all()
         return True
+
+    # -- release-event wait (starved claimants block, not spin) --------------
+
+    def release_epoch(self, node: int | None = None) -> int:
+        """Current release epoch — per ``node`` when given, global otherwise.
+        Read *before* a try_commit attempt: if the attempt fails,
+        ``wait_for_release(epoch, ...)`` returns immediately when a matching
+        slot was freed since — the lost-wakeup-free handshake."""
+        with self._lock:
+            if node is None:
+                return self._release_epoch
+            return self._node_release_epoch.get(node, 0)
+
+    def wait_for_release(self, epoch: int, timeout: float | None = None,
+                         node: int | None = None) -> bool:
+        """Block until the release epoch advances past ``epoch`` — a claim
+        was released or preempted since the caller sampled it, on ``node``
+        when given (unrelated nodes' churn does not wake-and-burn a
+        node-pinned claimant's retry budget) — or ``timeout`` elapses.
+        Returns True if a matching release happened."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._release_cond:
+            while True:
+                current = self._release_epoch if node is None \
+                    else self._node_release_epoch.get(node, 0)
+                if current != epoch:
+                    return True
+                if deadline is None:
+                    self._release_cond.wait()
+                    continue
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._release_cond.wait(remaining)
 
     def _preempt_for(self, shortfall: Mapping[int, int], priority: int,
                      app: str) -> list[Claim]:

@@ -9,7 +9,11 @@ back into the decision workflows and optionally replayed into the cluster
 simulator so both data planes share one plan.
 """
 
-from repro.runtime.store import Blob, ShuffleStore  # noqa: F401
+from repro.runtime.store import (  # noqa: F401
+    Blob,
+    QuotaExceededError,
+    ShuffleStore,
+)
 from repro.runtime.metrics import (  # noqa: F401
     InvocationRecord,
     MetricsSink,
@@ -21,6 +25,7 @@ from repro.runtime.invoker import (  # noqa: F401
     Invocation,
     InvocationError,
     Invoker,
+    SlotGate,
     ThreadPoolInvoker,
 )
 from repro.runtime.functions import FUNCTIONS, register  # noqa: F401
@@ -29,4 +34,11 @@ from repro.runtime.executor import (  # noqa: F401
     Runtime,
     RuntimeStage,
     StagePlanner,
+)
+from repro.runtime.scheduler import (  # noqa: F401
+    FairShareGate,
+    GateTimeoutError,
+    QueryJob,
+    QueryResult,
+    QueryScheduler,
 )

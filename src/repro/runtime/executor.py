@@ -113,7 +113,9 @@ class DAGExecutor:
             if planner is not None:
                 admit(planner.on_stage_complete(st.name, self.runtime, pc))
             for src in st.ephemeral_inputs:
-                self.runtime.store.delete_stage(app, src)
+                # under a quota the stage is sealed (lazily evicted when the
+                # app needs headroom); otherwise dropped immediately
+                self.runtime.store.reclaim_stage(app, src)
 
         if self.barrier or not getattr(invoker, "parallel", False):
             self._run_serial(pending, completed, invoker, dep_invs, finish)

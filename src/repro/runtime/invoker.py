@@ -28,6 +28,22 @@ from repro.runtime.metrics import InvocationRecord, MetricsSink
 from repro.runtime.store import ShuffleStore
 
 
+class SlotGate:
+    """Admission control over slot claims, consulted before the controller.
+
+    A scheduler policy (e.g. weighted fair share, ``repro.runtime.scheduler``)
+    installs a gate on the shared invoker; ``acquire`` blocks until the
+    invocation's application may take one more function slot, ``release``
+    returns the token. The default gate admits everything.
+    """
+
+    def acquire(self, inv: "Invocation") -> None:  # pragma: no cover
+        return None
+
+    def release(self, inv: "Invocation") -> None:  # pragma: no cover
+        return None
+
+
 @dataclass(frozen=True)
 class Invocation:
     """One stateless function instance of a stage."""
@@ -110,20 +126,30 @@ class Invoker:
     ``parallel`` advertises whether ``run_stage`` may be driven for several
     stages concurrently — the dependency-driven executor overlaps
     independent stages only on parallel backends.
+
+    A failed claim blocks on the controller's release event (bounded per
+    attempt by ``starve_wait``, default ``RELEASE_WAIT``) instead of busy
+    spinning, so a starved invocation wakes the moment a slot frees and
+    ``max_attempts`` bounds only genuinely stuck claims. ``gate`` is an
+    optional ``SlotGate`` a scheduler installs to ration slots across
+    applications; the gate token is held exactly while the claim is.
     """
 
     parallel = False
+    RELEASE_WAIT = 0.1      # max seconds blocked per attempt on the event
 
     def __init__(self, gc: GlobalController, store: ShuffleStore,
                  metrics: MetricsSink | None = None, max_attempts: int = 5,
                  starve_wait: float = 0.0,
-                 intercept: Callable[[Invocation, int], None] | None = None):
+                 intercept: Callable[[Invocation, int], None] | None = None,
+                 gate: SlotGate | None = None):
         self.gc = gc
         self.store = store
         self.metrics = metrics or MetricsSink()
         self.max_attempts = max_attempts
         self.starve_wait = starve_wait
         self.intercept = intercept
+        self.gate = gate
         self.registry: Mapping[str, Callable[[FnContext], Any]] | None = None
 
     def _resolve(self, name: str) -> Callable[[FnContext], Any]:
@@ -137,26 +163,46 @@ class Invoker:
 
     def _execute_one(self, inv: Invocation, deps: tuple[str, ...]) -> None:
         fn = self._resolve(inv.func)
+        wait = self.starve_wait if self.starve_wait > 0 else self.RELEASE_WAIT
         for attempt in range(self.max_attempts):
-            claim = self.gc.try_commit(inv.app, inv.priority, [inv.node],
-                                       tag=inv.name)
-            if claim is None:
-                # every slot on the node is held by >=-priority work; wait for
-                # a release (threaded) or spin a bounded number of times
-                if self.starve_wait:
-                    time.sleep(self.starve_wait)
-                continue
-            if self.intercept is not None:
-                self.intercept(inv, attempt)
-            t0 = time.perf_counter()
-            ctx = FnContext(self.store, inv)
+            if self.gate is not None:
+                self.gate.acquire(inv)
+            claim = None
             try:
-                fn(ctx)
-            except Exception:
-                self.gc.finish(claim)
-                raise
-            t1 = time.perf_counter()
-            committed = self.gc.finish(claim)
+                # Sample the node's release epoch *before* the attempt: if
+                # the claim fails and a slot frees in between,
+                # wait_for_release returns immediately — no lost wakeup.
+                epoch = self.gc.release_epoch(inv.node)
+                claim = self.gc.try_commit(inv.app, inv.priority, [inv.node],
+                                           tag=inv.name)
+            finally:
+                # no claim taken (conflict, unknown node, a listener raising
+                # mid-commit): the gate token must not leak
+                if claim is None and self.gate is not None:
+                    self.gate.release(inv)
+            if claim is None:
+                # every slot on the node is held by >=-priority work: block
+                # until a claim on *this* node releases (unrelated nodes'
+                # churn must not burn the retry budget), then retry
+                self.gc.wait_for_release(epoch, timeout=wait, node=inv.node)
+                continue
+            try:
+                try:
+                    if self.intercept is not None:
+                        self.intercept(inv, attempt)
+                    t0 = time.perf_counter()
+                    ctx = FnContext(self.store, inv)
+                    fn(ctx)
+                except Exception:
+                    # any failure while the claim is live (intercept hook
+                    # included) must release the slot, not leak it
+                    self.gc.finish(claim)
+                    raise
+                t1 = time.perf_counter()
+                committed = self.gc.finish(claim)
+            finally:
+                if self.gate is not None:
+                    self.gate.release(inv)
             self.metrics.record(InvocationRecord(
                 inv.name, inv.app, inv.stage, inv.func, inv.node, attempt,
                 "ok" if committed else "preempted", t0, t1,
@@ -194,10 +240,12 @@ class ThreadPoolInvoker(Invoker):
 
     def __init__(self, gc: GlobalController, store: ShuffleStore,
                  metrics: MetricsSink | None = None, max_workers: int = 8,
-                 max_attempts: int = 200, starve_wait: float = 0.005,
-                 intercept: Callable[[Invocation, int], None] | None = None):
+                 max_attempts: int = 200, starve_wait: float = 0.0,
+                 intercept: Callable[[Invocation, int], None] | None = None,
+                 gate: SlotGate | None = None):
         super().__init__(gc, store, metrics, max_attempts=max_attempts,
-                         starve_wait=starve_wait, intercept=intercept)
+                         starve_wait=starve_wait, intercept=intercept,
+                         gate=gate)
         self.max_workers = max_workers
 
     def run_stage(self, invocations: Sequence[Invocation],

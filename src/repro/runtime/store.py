@@ -33,11 +33,23 @@ class Blob:
     rows: int
 
 
+class QuotaExceededError(RuntimeError):
+    """A write could not be admitted under the application's store quota."""
+
+
 class ShuffleStore:
     """Thread-safe ephemeral blob store with per-node byte accounting.
 
     Lifecycle is per-(app, stage): ``delete_stage`` reclaims a stage as soon
     as its consumers finish, ``clear_app`` tears down a whole query's state.
+
+    Multi-tenant sharing: ``quotas`` caps each application's live footprint.
+    An over-quota write first evicts the app's own *sealed* stages
+    (consumed-ephemeral state the executor hands back via
+    ``reclaim_stage``), then blocks awaiting concurrent frees — admission
+    backpressure — and finally raises ``QuotaExceededError`` after
+    ``quota_timeout`` seconds. ``app_bytes``/``peak_bytes`` expose per-app
+    live/high-water footprints to schedulers and benchmarks.
 
     ``net_bw`` (bytes/s) optionally emulates the transfer cost: cross-node
     reads block for ``bytes / net_bw`` seconds *outside* the store lock, so
@@ -50,8 +62,11 @@ class ShuffleStore:
     """
 
     def __init__(self, net_bw: float | None = None,
-                 disaggregated: bool = False):
+                 disaggregated: bool = False,
+                 quotas: Mapping[str, int] | None = None,
+                 quota_timeout: float = 10.0):
         self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
         self.net_bw = net_bw
         self.disaggregated = disaggregated
         # (app, stage) -> partition -> writer -> Blob
@@ -61,6 +76,80 @@ class ShuffleStore:
         self.read_bytes: dict[int, int] = {}       # reader node -> bytes read
         self.sent_bytes: dict[int, int] = {}       # source node -> remote reads
         self.cross_node_bytes = 0                  # total shuffle traffic
+        # -- per-application memory quotas (multi-tenant sharing) ------------
+        self._quotas: dict[str, int] = dict(quotas or {})
+        self.quota_timeout = quota_timeout
+        self.app_bytes: dict[str, int] = {}        # app -> live blob bytes
+        self.peak_bytes: dict[str, int] = {}       # app -> high-water mark
+        # sealed stages: consumed-ephemeral state, readable until quota
+        # pressure reclaims it (insertion order == LRU eviction order)
+        self._sealed: dict[tuple[str, str], bool] = {}
+        self.evictions: list[tuple[str, str, int]] = []
+
+    # -- quotas ---------------------------------------------------------------
+
+    def set_quota(self, app: str, limit: int | None) -> None:
+        """Cap an application's live store footprint at ``limit`` bytes
+        (``None`` removes the cap). Writes over the cap first reclaim the
+        app's own sealed stages, then block awaiting concurrent frees, then
+        raise ``QuotaExceededError`` after ``quota_timeout`` seconds."""
+        with self._cond:
+            if limit is None:
+                self._quotas.pop(app, None)
+            else:
+                self._quotas[app] = int(limit)
+            self._cond.notify_all()
+
+    def quota(self, app: str) -> int | None:
+        with self._lock:
+            return self._quotas.get(app)
+
+    def _evict_one(self, app: str) -> bool:
+        """Reclaim the app's least-recently-sealed stage; caller holds the
+        lock. Returns True if anything was freed."""
+        for key in self._sealed:
+            if key[0] != app:
+                continue
+            freed = self.delete_stage(*key)
+            self.evictions.append((key[0], key[1], freed))
+            return True
+        return False
+
+    def _admit(self, app: str, stage: str, partition: int, writer: str,
+               nbytes: int) -> None:
+        """Block (under the lock, via the condition) until ``nbytes`` fits
+        the app's quota, evicting sealed stages first. Caller holds the
+        lock."""
+        deadline = None
+        while True:
+            limit = self._quotas.get(app)
+            if limit is None:
+                return
+            old = self._stages.get((app, stage), {}) \
+                .get(partition, {}).get(writer)
+            delta = nbytes - (old.nbytes if old is not None else 0)
+            if self.app_bytes.get(app, 0) + delta <= limit:
+                return
+            if delta > limit:
+                # permanently unsatisfiable: even with every other byte of
+                # the app freed this one write cannot fit — fail fast
+                # instead of pinning the slot for quota_timeout
+                raise QuotaExceededError(
+                    f"app {app!r}: single write of {nbytes} bytes to stage "
+                    f"{stage!r} can never fit quota {limit}")
+            if self._evict_one(app):
+                continue
+            now = time.monotonic()
+            if deadline is None:
+                deadline = now + self.quota_timeout
+            if now >= deadline:
+                raise QuotaExceededError(
+                    f"app {app!r}: write of {nbytes} bytes to stage "
+                    f"{stage!r} exceeds quota {limit} "
+                    f"(live {self.app_bytes.get(app, 0)} bytes, nothing "
+                    f"sealed to evict, no free within "
+                    f"{self.quota_timeout}s)")
+            self._cond.wait(deadline - now)
 
     # -- writes ---------------------------------------------------------------
 
@@ -73,16 +162,22 @@ class ShuffleStore:
         nbytes, rows = int(table.nbytes), int(table.num_rows)
         if self.disaggregated and self.net_bw and writer != "seed":
             time.sleep(nbytes / self.net_bw)
-        with self._lock:
+        with self._cond:
+            self._admit(app, stage, partition, writer, nbytes)
             parts = self._stages.setdefault((app, stage), {})
             blobs = parts.setdefault(partition, {})
             old = blobs.get(writer)
             if old is not None:   # preempted attempt being re-done: retract it
                 self.resident_bytes[old.node] = \
                     self.resident_bytes.get(old.node, 0) - old.nbytes
+                self.app_bytes[app] = \
+                    self.app_bytes.get(app, 0) - old.nbytes
             blobs[writer] = Blob(table, node, nbytes, rows)
             self.resident_bytes[node] = self.resident_bytes.get(node, 0) + nbytes
             self.written_bytes[node] = self.written_bytes.get(node, 0) + nbytes
+            self.app_bytes[app] = self.app_bytes.get(app, 0) + nbytes
+            self.peak_bytes[app] = max(self.peak_bytes.get(app, 0),
+                                       self.app_bytes[app])
         return nbytes
 
     def ingest(self, app: str, stage: str, partitions: Mapping[int, object],
@@ -172,22 +267,53 @@ class ShuffleStore:
 
     # -- lifecycle -------------------------------------------------------------
 
+    def seal(self, app: str, stage: str) -> None:
+        """Mark a stage reclaimable: its consumers are done, reads still
+        work, and quota pressure may evict it (LRU by seal order)."""
+        with self._cond:
+            if (app, stage) in self._stages:
+                self._sealed[(app, stage)] = True
+                self._cond.notify_all()     # blocked writers can now evict
+
+    def drop_sealed(self, app: str) -> int:
+        """Drop every sealed stage of an app — end-of-query GC parity with
+        the quota-less eager-delete path. Returns bytes freed."""
+        with self._cond:
+            freed = 0
+            for key in [k for k in self._sealed if k[0] == app]:
+                freed += self.delete_stage(*key)
+            return freed
+
+    def reclaim_stage(self, app: str, stage: str) -> int:
+        """Ephemeral-input GC entry point for the executor: under a quota the
+        stage is sealed (lazily evicted when the app needs headroom),
+        otherwise dropped immediately. Returns bytes freed now."""
+        with self._cond:
+            if self._quotas.get(app) is not None:
+                self.seal(app, stage)
+                return 0
+            return self.delete_stage(app, stage)
+
     def delete_stage(self, app: str, stage: str) -> int:
         """Drop a stage's blobs; returns bytes reclaimed (ephemerality is the
         point: shuffle state outlives only its consumers)."""
-        with self._lock:
+        with self._cond:
             parts = self._stages.pop((app, stage), {})
+            self._sealed.pop((app, stage), None)
             freed = 0
             for blobs in parts.values():
                 for b in blobs.values():
                     self.resident_bytes[b.node] = \
                         self.resident_bytes.get(b.node, 0) - b.nbytes
                     freed += b.nbytes
+            if freed:
+                self.app_bytes[app] = self.app_bytes.get(app, 0) - freed
+                self._cond.notify_all()     # wake quota-blocked writers
             return freed
 
     def clear_app(self, app: str) -> int:
         freed = 0
-        with self._lock:
+        with self._cond:
             for key in [k for k in self._stages if k[0] == app]:
                 freed += self.delete_stage(*key)
         return freed

@@ -1,9 +1,23 @@
+import os
+
 import jax
 import pytest
 
 # Smoke tests and benches must see the real (1-device) CPU platform; the
 # 512-device override belongs exclusively to repro.launch.dryrun.
 jax.config.update("jax_platform_name", "cpu")
+
+# Property-based suites run under a bounded profile: CI pins
+# HYPOTHESIS_PROFILE=ci (fewer examples, no per-example deadline flakes);
+# local runs get the broader dev profile. No-op on bare environments.
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", max_examples=40, deadline=None)
+    _hyp_settings.register_profile("dev", max_examples=100, deadline=None)
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ModuleNotFoundError:          # pragma: no cover - shim covers tests
+    pass
 
 
 @pytest.fixture(scope="session")

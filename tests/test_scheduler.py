@@ -1,0 +1,312 @@
+"""Multi-query sharing engine: QueryScheduler policies, fair-share slot
+rationing, starvation semantics, and concurrent simulator/runtime decision
+parity over the shared substrate."""
+
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.analytics import (
+    QueryStrategy,
+    build_query_workflow,
+    make_cluster,
+    plan_query_tasks,
+    synth_query_tables,
+)
+from repro.core.controllers import GlobalController, PrivateController
+from repro.runtime import (
+    FairShareGate,
+    InlineInvoker,
+    Invocation,
+    InvocationError,
+    MetricsSink,
+    QueryJob,
+    QueryScheduler,
+    Runtime,
+    ShuffleStore,
+)
+
+STRATEGIES = ("static_merge", "static_hash", "dynamic", "dynamic_fig6")
+
+
+def make_query(seed, rows=2048, dim_rows=256, keyspace=1024, fact_nodes=4,
+               dim_nodes=2):
+    return synth_query_tables(rows, dim_rows, keyspace=keyspace, seed=seed,
+                              fact_nodes=fact_nodes, dim_nodes=dim_nodes)
+
+
+# -- starvation semantics regression (the busy-spin bug) --------------------------
+
+
+def test_starved_invocation_succeeds_once_slot_frees():
+    """With ``starve_wait=0`` the old loop burned every attempt instantly
+    (`claim is None` -> continue); the event-based wait blocks on the
+    controller's release event, so a starved invocation succeeds the moment
+    the hog releases — within the same small ``max_attempts`` budget."""
+    gc = GlobalController({0: 1})
+    hog = gc.commit("hog", priority=5, placement=[0])
+    store, metrics = ShuffleStore(), MetricsSink()
+    invoker = InlineInvoker(gc, store, metrics, max_attempts=5,
+                            starve_wait=0.0)
+    invoker.registry = {"noop": lambda ctx: None}
+    inv = Invocation("lo/s/0", "lo", "s", 0, "noop", node=0, priority=0)
+
+    done = []
+    t = threading.Thread(
+        target=lambda: (invoker.run_stage([inv]), done.append(True)))
+    t.start()
+    time.sleep(0.15)                 # old code: already starved and raised
+    assert not done, "invocation gave up while the slot was still held"
+    gc.release(hog)
+    t.join(timeout=10)
+    assert not t.is_alive() and done
+    recs = [r for r in metrics.records if r.name == "lo/s/0"]
+    assert [r.status for r in recs] == ["ok"]
+    assert sum(gc.used.values()) == 0
+
+
+def test_truly_starved_invocation_still_errors_within_budget():
+    gc = GlobalController({0: 1})
+    gc.commit("hog", priority=5, placement=[0])   # never released
+    invoker = InlineInvoker(gc, ShuffleStore(), MetricsSink(),
+                            max_attempts=3, starve_wait=0.01)
+    invoker.registry = {"noop": lambda ctx: None}
+    inv = Invocation("lo/s/0", "lo", "s", 0, "noop", node=0, priority=0)
+    with pytest.raises(InvocationError, match="no slot"):
+        invoker.run_stage([inv])
+
+
+# -- fair-share gate arithmetic ---------------------------------------------------
+
+
+def _inv(app, priority=0):
+    return Invocation(f"{app}/s/0", app, "s", 0, "noop", node=0,
+                      priority=priority)
+
+
+def test_fair_share_gate_entitlements_and_work_conservation():
+    gate = FairShareGate(total_slots=4, timeout=2.0)
+    gate.register("a", weight=3.0)
+    gate.register("b", weight=1.0)
+    assert gate.entitlement("a") == 3
+    assert gate.entitlement("b") == 1
+
+    for _ in range(3):
+        gate.acquire(_inv("a"))
+    # work conservation: b is idle, so a may exceed its entitlement
+    gate.acquire(_inv("a"))
+    assert gate.in_use["a"] == 4
+
+    # b's demand now blocks until a releases; once a slot frees, the
+    # under-served app wins it even though a is also waiting
+    got_b = threading.Event()
+    t_b = threading.Thread(
+        target=lambda: (gate.acquire(_inv("b")), got_b.set()))
+    t_b.start()
+    time.sleep(0.05)
+    assert not got_b.is_set()        # full: b waits
+    a_acquired = threading.Event()
+    t_a = threading.Thread(
+        target=lambda: (gate.acquire(_inv("a")), a_acquired.set()))
+    t_a.start()
+    time.sleep(0.05)
+    gate.release(_inv("a"))          # one slot frees; b is under-served
+    t_b.join(timeout=5)
+    assert got_b.is_set()
+    assert gate.in_use["b"] == 1
+    assert not a_acquired.is_set(), \
+        "over-entitled app took the slot from the under-served waiter"
+    gate.release(_inv("b"))          # b done -> a's waiter proceeds
+    t_a.join(timeout=5)
+    assert a_acquired.is_set()
+
+
+def test_gate_token_released_when_claim_attempt_raises():
+    """A commit-path exception (e.g. a listener raising mid-preemption)
+    must not leak the fair-share gate token."""
+    gc = GlobalController({0: 1})
+    gate = FairShareGate(total_slots=1, timeout=1.0)
+    gate.register("lo", weight=1.0)
+    invoker = InlineInvoker(gc, ShuffleStore(), MetricsSink(),
+                            max_attempts=2, gate=gate)
+    invoker.registry = {"noop": lambda ctx: None}
+
+    def bad_listener(event, claim):
+        raise RuntimeError("listener exploded")
+
+    gc.subscribe(bad_listener)
+    inv = Invocation("lo/s/0", "lo", "s", 0, "noop", node=0, priority=0)
+    with pytest.raises(RuntimeError, match="listener exploded"):
+        invoker.run_stage([inv])
+    assert gate.in_use["lo"] == 0            # token returned despite the raise
+    # the controller rolled the booked claim back too: no slot leak
+    assert gc.used == {0: 0}
+    assert gc.claims == {}
+
+
+def test_fair_share_gate_unregister_redistributes():
+    gate = FairShareGate(total_slots=8, timeout=2.0)
+    gate.register("a", weight=1.0)
+    gate.register("b", weight=1.0)
+    assert gate.entitlement("a") == 4
+    gate.unregister("b")
+    assert gate.entitlement("a") == 8
+
+
+# -- scheduler policies -----------------------------------------------------------
+
+
+def test_scheduler_fifo_serializes_in_arrival_order():
+    gc = GlobalController({n: 8 for n in range(4)})
+    sched = QueryScheduler(Runtime(gc), policy="fifo")
+    queries = {f"q{i}": make_query(40 + 3 * i) for i in range(3)}
+    for app, (fd, dd, _) in queries.items():
+        sched.submit(QueryJob(app, fd, dd, "static_hash", priority=0))
+    results = sched.run()
+    for app, (_, _, ref) in queries.items():
+        assert results[app].ok, results[app].error
+        np.testing.assert_allclose(results[app].sums, ref, atol=1e-3)
+    # strict serialization: each query starts after the previous finished
+    ordered = [results[f"q{i}"] for i in range(3)]
+    for prev, nxt in zip(ordered, ordered[1:]):
+        assert nxt.started >= prev.finished
+    assert sum(gc.used.values()) == 0
+
+
+def test_scheduler_priority_admits_high_priority_first():
+    gc = GlobalController({n: 8 for n in range(4)})
+    sched = QueryScheduler(Runtime(gc), policy="priority")
+    fd, dd, ref_lo = make_query(50)
+    fd2, dd2, ref_hi = make_query(53)
+    sched.submit(QueryJob("lo", fd, dd, "static_hash", priority=0))
+    sched.submit(QueryJob("hi", fd2, dd2, "static_hash", priority=10))
+    results = sched.run()
+    assert results["hi"].started <= results["lo"].started
+    assert results["hi"].finished <= results["lo"].started
+    np.testing.assert_allclose(results["hi"].sums, ref_hi, atol=1e-3)
+    np.testing.assert_allclose(results["lo"].sums, ref_lo, atol=1e-3)
+
+
+def test_scheduler_fair_share_runs_concurrently_and_correctly():
+    gc = GlobalController({n: 8 for n in range(4)})
+    runtime = Runtime(gc, invoker="threads", max_workers=8)
+    sched = QueryScheduler(runtime, policy="fair_share")
+    queries = {}
+    for i in range(4):
+        app = f"q{i}"
+        queries[app] = make_query(60 + 3 * i)
+        fd, dd, _ = queries[app]
+        sched.submit(QueryJob(app, fd, dd, STRATEGIES[i % 4],
+                              priority=10 if i % 2 else 0))
+    results = sched.run()
+    for app, (_, _, ref) in queries.items():
+        assert results[app].ok, results[app].error
+        np.testing.assert_allclose(results[app].sums, ref, atol=1e-3)
+    # really concurrent: some pair of queries' execution spans intersect
+    spans = sorted((r.started, r.finished) for r in results.values())
+    assert any(a_end > b_start for (_, a_end), (b_start, _)
+               in zip(spans, spans[1:]))
+    # the gate came off the invoker and no slots leaked
+    assert runtime.invoker.gate is None
+    assert sum(gc.used.values()) == 0
+    # per-query decision sequences were captured
+    assert all(len(r.decisions) == 4 for r in results.values())
+
+
+def test_scheduler_fair_share_respects_store_quotas():
+    gc = GlobalController({n: 8 for n in range(4)})
+    runtime = Runtime(gc, invoker="threads", max_workers=8)
+    sched = QueryScheduler(runtime, policy="fair_share")
+    fd, dd, ref = make_query(70)
+    input_bytes = fd.nbytes + dd.nbytes
+    quota = 6 * input_bytes
+    sched.submit(QueryJob("capped", fd, dd, "static_merge", priority=5,
+                          quota=quota))
+    results = sched.run()
+    assert results["capped"].ok, results["capped"].error
+    np.testing.assert_allclose(results["capped"].sums, ref, atol=1e-3)
+    assert runtime.store.peak_bytes["capped"] <= quota
+    # end-of-query cleanup: the quota is lifted and the sealed
+    # consumed-ephemeral stages are gone (parity with the quota-less path)
+    assert runtime.store.quota("capped") is None
+    assert runtime.store.stage_bytes("capped", "fact_buckets") == 0
+    assert runtime.store.stage_bytes("capped", "dim_buckets") == 0
+    # non-ephemeral state (inputs, scans, result) stays inspectable
+    assert runtime.store.stage_bytes("capped", "result") > 0
+
+
+def test_scheduler_surfaces_per_query_errors():
+    class BoomStrategy:
+        """Join decision node that always fails (no fallback)."""
+
+        name = "boom"
+
+        def join_method(self, ctx):
+            raise RuntimeError("boom: decision node exploded")
+
+    gc = GlobalController({n: 8 for n in range(4)})
+    sched = QueryScheduler(Runtime(gc), policy="fifo")
+    fd, dd, ref = make_query(80)
+    sched.submit(QueryJob("bad", fd, dd, BoomStrategy()))
+    sched.submit(QueryJob("good", fd, dd, "static_hash"))
+    results = sched.run()
+    assert not results["bad"].ok
+    assert isinstance(results["bad"].error, RuntimeError)
+    assert results["good"].ok
+    np.testing.assert_allclose(results["good"].sums, ref, atol=1e-3)
+    assert sum(gc.used.values()) == 0
+
+
+# -- differential: concurrent runtime vs simulator decision parity ----------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_concurrent_mix_sim_and_runtime_bind_identical_decisions(seed):
+    """Randomized workload mixes: N queries run *concurrently* on the real
+    runtime under fair-share; the simulator then plans each query through
+    the same workflow objects. Every app must materialize the identical
+    per-query decision sequence on both planes — concurrency (slot
+    contention, gate waits, interleaved store traffic) must not leak into
+    the decision workflows."""
+    rng = random.Random(seed)
+    n_queries = rng.randint(2, 4)
+    jobs = []
+    for i in range(n_queries):
+        app = f"mix{i}"
+        strat = rng.choice(STRATEGIES)
+        fd, dd, ref = make_query(seed=100 * seed + 7 * i,
+                                 rows=rng.choice([1024, 2048, 4096]),
+                                 dim_rows=rng.choice([128, 256]))
+        wf = build_query_workflow(QueryStrategy(strat))
+        jobs.append((app, strat, fd, dd, ref, wf,
+                     rng.choice([0, 5, 10])))
+
+    gc = GlobalController({n: 8 for n in range(4)})
+    runtime = Runtime(gc, invoker="threads", max_workers=8)
+    sched = QueryScheduler(runtime, policy="fair_share")
+    for app, strat, fd, dd, _, wf, prio in jobs:
+        sched.submit(QueryJob(app, fd, dd, strat, priority=prio,
+                              workflow=wf))
+    results = sched.run()
+
+    runtime_seqs = {}
+    for app, strat, fd, dd, ref, wf, _ in jobs:
+        assert results[app].ok, results[app].error
+        np.testing.assert_allclose(results[app].sums, ref, atol=1e-3)
+        runtime_seqs[app] = results[app].decisions
+
+    # simulator pass: same workflow objects, one shared simulated cluster
+    gc_sim, sim = make_cluster(4)
+    for app, strat, fd, dd, _, wf, prio in jobs:
+        pc = PrivateController(app, gc_sim, priority=10)
+        plan_query_tasks(sim, pc, fd, dd, QueryStrategy(strat), app=app,
+                         workflow=wf)
+        sim_seq = list(wf.last_run.sequence)
+        assert sim_seq == runtime_seqs[app], \
+            f"{app} [{strat}]: decision sequences diverged across planes"
+    out = sim.run()
+    for app, *_ in jobs:
+        assert out["completion"][app] > 0
