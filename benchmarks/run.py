@@ -2,7 +2,7 @@
 roofline report. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fig4|fig7|fig8|roofline|executor|sharing]
+        [--only fig4|fig7|fig8|roofline|executor|sharing|faults]
 """
 
 from __future__ import annotations
@@ -15,6 +15,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks import (
     bench_executor,
+    bench_faults,
     bench_sharing,
     fig4_join,
     fig7_query,
@@ -27,7 +28,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig4", "fig7", "fig8", "roofline", "executor",
-                             "sharing"])
+                             "sharing", "faults"])
     args = ap.parse_args(argv)
 
     sections = {
@@ -37,6 +38,7 @@ def main(argv=None) -> None:
         "roofline": roofline.main,
         "executor": bench_executor.main,
         "sharing": bench_sharing.main,
+        "faults": bench_faults.main,
     }
     if args.only:
         sections = {args.only: sections[args.only]}

@@ -15,12 +15,14 @@ from repro.analytics.planner import (  # noqa: F401
     build_query_workflow,
     estimate_scan_output,
     plan_query_with_workflow,
+    stages_for_run,
 )
 from repro.analytics.simulator import (  # noqa: F401
     ClusterSim,
     SimTask,
     calibrated_rates,
     make_cluster,
+    sim_fault_models,
 )
 from repro.analytics.query import (  # noqa: F401
     QueryStrategy,

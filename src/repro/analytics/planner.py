@@ -238,12 +238,12 @@ def scan_stages(app: str, fact_layout: Sequence[tuple[int, int]],
             _inv(app, "scan_fact", i, "scan_filter", node,
                  {"src": "input/fact", "dst": "scan_fact", "partition": i,
                   "filter_col": "v0", "filter_gt": 0.0}, priority)
-            for i, node in fact_layout]),
+            for i, node in fact_layout], decision="scan"),
         RuntimeStage("scan_dim", [
             _inv(app, "scan_dim", j, "scan_filter", node,
                  {"src": "input/dim", "dst": "scan_dim", "partition": j},
                  priority)
-            for j, node in dim_layout]),
+            for j, node in dim_layout], decision="scan"),
     ]
 
 
@@ -287,12 +287,14 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                 _inv(app, "shuffle_fact", i, "shuffle_write", node,
                      {"src": "scan_fact", "dst": "fact_buckets",
                       "partition": i, "num_buckets": n_join}, priority)
-                for i, node in fact_layout], deps=("scan_fact",)),
+                for i, node in fact_layout], deps=("scan_fact",),
+                decision="exchange"),
             RuntimeStage("shuffle_dim", [
                 _inv(app, "shuffle_dim", j, "shuffle_write", node,
                      {"src": "scan_dim", "dst": "dim_buckets",
                       "partition": j, "num_buckets": n_join}, priority)
-                for j, node in dim_layout], deps=("scan_dim",)),
+                for j, node in dim_layout], deps=("scan_dim",),
+                decision="exchange"),
             RuntimeStage("join", [
                 _inv(app, "join", r, "merge_join_partition", join_nodes[r],
                      {"fact_stage": "fact_buckets", "fact_partitions": [r],
@@ -301,7 +303,8 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                       "num_groups": num_groups}, priority)
                 for r in range(n_join)],
                 deps=("shuffle_fact", "shuffle_dim"),
-                ephemeral_inputs=("fact_buckets", "dim_buckets")),
+                ephemeral_inputs=("fact_buckets", "dim_buckets"),
+                decision="join"),
         ]
     else:
         stages += [
@@ -309,7 +312,8 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                 _inv(app, "broadcast_dim", j, "broadcast_write", node,
                      {"src": "scan_dim", "dst": "dim_bcast", "partition": j},
                      priority)
-                for j, node in dim_layout], deps=("scan_dim",)),
+                for j, node in dim_layout], deps=("scan_dim",),
+                decision="exchange"),
             RuntimeStage("join", [
                 _inv(app, "join", k, "hash_join_partition", join_nodes[k],
                      {"fact_stage": "scan_fact",
@@ -319,7 +323,7 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                       "dst": "joined", "partition": k,
                       "num_groups": num_groups}, priority)
                 for k in range(n_join)],
-                deps=("scan_fact", "broadcast_dim")),
+                deps=("scan_fact", "broadcast_dim"), decision="join"),
         ]
 
     stages += [
@@ -328,12 +332,13 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                  {"src": "joined", "dst": "partials", "partition": k,
                   "num_groups": num_groups}, priority)
             for k in range(n_join)], deps=("join",),
-            ephemeral_inputs=("joined",)),
+            ephemeral_inputs=("joined",), decision="aggregate"),
         RuntimeStage("final_agg", [
             _inv(app, "final_agg", 0, "final_aggregate", agg_nodes[0],
                  {"src": "partials", "dst": "result",
                   "num_groups": num_groups}, priority)],
-            deps=("partial_agg",), ephemeral_inputs=("partials",)),
+            deps=("partial_agg",), ephemeral_inputs=("partials",),
+            decision="aggregate"),
     ]
     return stages
 
@@ -394,6 +399,22 @@ class AdaptiveQueryPlan:
             self.run.ctx.data_dist["A"], num_groups=self.num_groups,
             priority=self.priority, exchange=exchange_d,
             aggregate=aggregate_d)
+
+
+def stages_for_run(run: WorkflowRun, app: str,
+                   fact_layout: Sequence[tuple[int, int]],
+                   dim_layout: Sequence[tuple[int, int]],
+                   num_groups: int = 64, priority: int = 0) -> list:
+    """Materialize the full physical stage list from an already-bound
+    ``WorkflowRun`` — the *static* twin of ``AdaptiveQueryPlan``'s
+    incremental emission, used by the simulator-side fault model to predict
+    recovery stage sets (``repro.runtime.lineage.expected_recovery``) for
+    the exact plan the decisions imply."""
+    return scan_stages(app, fact_layout, dim_layout, priority) + tail_stages(
+        app, fact_layout, dim_layout, run.decisions["join"],
+        run.ctx.data_dist["A"], num_groups=num_groups, priority=priority,
+        exchange=run.decisions.get("exchange"),
+        aggregate=run.decisions.get("aggregate"))
 
 
 # ---------------------------------------------------------------------------

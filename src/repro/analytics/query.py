@@ -187,7 +187,8 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
                           num_groups: int = 64, invoker: str = "inline",
                           consolidate_threshold: int | None = None,
                           workflow: DecisionWorkflow | None = None,
-                          barrier: bool = False):
+                          barrier: bool = False, recovery="lineage",
+                          max_recoveries: int = 8):
     """Run the TPC-DS-like sub-query end-to-end on the serverless runtime.
 
     One decision workflow drives the whole query: the scan decision binds
@@ -197,7 +198,9 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
     aggregate decisions — the paper's interleaved decide→execute→re-decide
     loop. Pass ``workflow`` to share one workflow object across planners
     (e.g. with the simulator) and ``barrier=True`` to force the legacy
-    stage-at-a-time executor. Returns ``(group_sums, runtime)``.
+    stage-at-a-time executor. ``recovery``/``max_recoveries`` pick the
+    failure-handling policy for lost shuffle stages (see ``DAGExecutor``).
+    Returns ``(group_sums, runtime)``.
     """
     from repro.runtime.executor import Runtime
 
@@ -211,7 +214,8 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
         num_groups=num_groups, pc=pc,
         consolidate_threshold=consolidate_threshold, workflow=workflow)
     runtime.execute(plan.initial_stages(), pc=pc, planner=plan,
-                    barrier=barrier)
+                    barrier=barrier, recovery=recovery,
+                    max_recoveries=max_recoveries)
     return runtime.result(app), runtime
 
 

@@ -64,11 +64,33 @@ class Timeline:
 
 
 class ClusterSim:
-    """Event-driven simulator; one slot per task, NICs serialize transfers."""
+    """Event-driven simulator; one slot per task, NICs serialize transfers.
 
-    def __init__(self, gc: GlobalController, net_bw: float = DEFAULT_NET_BW):
+    Failure models (mirroring ``repro.runtime.faults``): ``straggle`` adds
+    per-node latency to tasks started there — either ``{node: delay}``
+    (every task on the node, unbounded) or scoped entries ``(node, delay,
+    task_family | None, times | None)`` matching the runtime injector's
+    stage filter and firing bound; overlapping entries combine by max, as
+    in ``FaultInjector.before_body``. ``crash_plan`` maps task names to a
+    number of failures — a crashed task occupies its slot for the full
+    duration, then releases it and re-enters the ready set (the runtime
+    invoker's crash-retry, priced in sim time). ``reexecutions`` counts the
+    extra runs.
+    """
+
+    def __init__(self, gc: GlobalController, net_bw: float = DEFAULT_NET_BW,
+                 straggle=None, crash_plan: Mapping[str, int] | None = None):
         self.gc = gc
         self.net_bw = net_bw
+        if isinstance(straggle, Mapping):
+            entries = [(n, d, None, None) for n, d in straggle.items()]
+        else:
+            entries = [tuple(e) for e in (straggle or ())]
+        # mutable: the last slot counts remaining firings (None = unbounded)
+        self._stragglers = [[n, d, fam, times]
+                            for n, d, fam, times in entries]
+        self.crash_plan = dict(crash_plan or {})
+        self.reexecutions = 0
         self.tasks: dict[str, SimTask] = {}
         self.done: set[str] = set()
         self.now = 0.0
@@ -132,7 +154,8 @@ class ClusterSim:
                     continue
                 ready_at = self._transfer_time(task, node)
                 task.started = self.now
-                finish = ready_at + task.duration
+                finish = ready_at + task.duration + \
+                    self._straggle_delay(task.name, node)
                 self._running[task.name] = claim
                 heapq.heappush(self._events,
                                (finish, next(self._counter), task.name))
@@ -140,6 +163,25 @@ class ClusterSim:
                     + (finish - self.now)
                 break
         self._sample()
+
+    def _straggle_delay(self, name: str, node: int) -> float:
+        """Injected latency for one task start: scoped entries match the
+        task's family (``app/<family>/i``), decrement their firing budget,
+        and combine by max — the runtime injector's semantics."""
+        family = name.split("/")[1] if name.count("/") >= 2 else None
+        delay = 0.0
+        for entry in self._stragglers:
+            s_node, s_delay, s_fam, s_times = entry
+            if s_node != node:
+                continue
+            if s_fam is not None and s_fam != family:
+                continue
+            if s_times is not None:
+                if s_times <= 0:
+                    continue
+                entry[3] = s_times - 1
+            delay = max(delay, s_delay)
+        return delay
 
     def _sample(self):
         used = sum(self.gc.used.values())
@@ -155,6 +197,15 @@ class ClusterSim:
                 break
             self.now = t
             task = self.tasks[name]
+            if self.crash_plan.get(name, 0) > 0:
+                # injected crash: the run burned its slot-time but commits
+                # nothing; the task re-enters the ready set (crash-retry)
+                self.crash_plan[name] -= 1
+                self.reexecutions += 1
+                task.started = -1.0
+                self.gc.release(self._running.pop(name))
+                self._try_start()
+                continue
             task.finished = t
             self.done.add(name)
             self.gc.release(self._running.pop(name))
@@ -170,10 +221,48 @@ class ClusterSim:
 
 
 def make_cluster(num_nodes: int, slots: int = DEFAULT_SLOTS,
-                 net_bw: float = DEFAULT_NET_BW) -> tuple[GlobalController,
-                                                          ClusterSim]:
+                 net_bw: float = DEFAULT_NET_BW, straggle=None,
+                 crash_plan: Mapping[str, int] | None = None,
+                 ) -> tuple[GlobalController, ClusterSim]:
     gc = GlobalController({n: slots for n in range(num_nodes)})
-    return gc, ClusterSim(gc, net_bw)
+    return gc, ClusterSim(gc, net_bw, straggle=straggle,
+                          crash_plan=crash_plan)
+
+
+# Runtime physical stage -> simulator task family (the sim plans the query
+# as map/join/agg phases; exchange stages have no separate sim task).
+_SIM_STAGE_MAP = {"scan_fact": "map1", "scan_dim": "map2", "join": "join",
+                  "final_agg": "agg"}
+
+
+def sim_fault_models(plan, app: str = "query") -> tuple[list, dict]:
+    """Map a ``repro.runtime.faults.FaultPlan`` onto the simulator's
+    failure models: ``(straggle_entries, crash_plan)`` for ``ClusterSim``.
+
+    Straggler entries keep the plan's stage scope (mapped to the sim task
+    family) and firing bound; stage-scoped stragglers and crashes naming a
+    runtime stage without a simulator task family (the exchange writes,
+    ``partial_agg``) are dropped — the sim folds those phases into its
+    join/agg tasks. A crash with ``index=None`` (any instance) pins to
+    instance 0 — the sim replays a *specific* schedule, not a matcher.
+    Stage *loss* is not a timing model at all: its simulator-side twin is
+    the static recovery prediction (``repro.runtime.lineage.
+    expected_recovery``), which the differential test checks against the
+    runtime's actual recovery events.
+    """
+    straggle = [(s.node, s.delay,
+                 _SIM_STAGE_MAP.get(s.stage) if s.stage else None, s.times)
+                for s in plan.stragglers
+                if s.stage is None or s.stage in _SIM_STAGE_MAP]
+    crash: dict[str, int] = {}
+    for c in plan.crashes:
+        fam = _SIM_STAGE_MAP.get(c.stage)
+        if fam is None:
+            continue
+        idx = c.index if c.index is not None else 0
+        name = f"{app}/{fam}/{idx}" if fam != "agg" else f"{app}/agg"
+        crash[name] = crash.get(name, 0) + c.times
+    return straggle, crash
 
 
 # -- calibration ------------------------------------------------------------------

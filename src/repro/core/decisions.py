@@ -192,6 +192,79 @@ def default_node(name: str, func: str = "default") -> DecisionNode:
     return DecisionNode(name, fn)
 
 
+# ---------------------------------------------------------------------------
+# Failure-feedback nodes: failure handling as a decision-workflow concern.
+# The runtime feeds observed failure metrics (per-invocation elapsed times,
+# recovery plan sizes) into these nodes exactly like any other profile
+# feedback; the decision tuple picks the mitigation — speculate vs wait,
+# lineage recompute vs whole-query rerun.
+# ---------------------------------------------------------------------------
+
+
+def should_speculate(done_seconds: Iterable[float], elapsed: float,
+                     multiple: float = 2.0, min_done: int = 2,
+                     floor: float = 0.05) -> bool:
+    """Pure straggler predicate shared by the runtime invoker and the
+    cluster simulator: an in-flight invocation is a straggler once its
+    elapsed time exceeds ``multiple`` × the p50 of its completed siblings
+    (needs ``min_done`` completions; ``floor`` suppresses speculation on
+    microsecond-scale stages where a backup costs more than it saves)."""
+    done = sorted(done_seconds)
+    if len(done) < min_done:
+        return False
+    p50 = done[len(done) // 2]
+    return elapsed > max(multiple * p50, floor)
+
+
+def speculation_node(multiple: float = 2.0, min_done: int = 2,
+                     floor: float = 0.05) -> DecisionNode:
+    """Failure-feedback node: launch a backup for a straggling invocation?
+
+    Context contract (fed by the invoker per straggler candidate):
+    ``profile["speculation.done_s"]`` — completed siblings' durations,
+    ``profile["speculation.elapsed_s"]`` — the candidate's elapsed time,
+    ``profile["speculation.node"]`` — the node it is stuck on. Decides
+    ``Decision("speculate", 1, schedule)`` with the schedule ranging over
+    every *other* node (the straggler's node is presumed slow), or
+    ``Decision("wait", 0, ...)``.
+    """
+
+    def fn(ctx: DecisionContext) -> Decision:
+        done = ctx.profile.get("speculation.done_s", ())
+        elapsed = float(ctx.profile.get("speculation.elapsed_s", 0.0))
+        avoid = ctx.profile.get("speculation.node")
+        nodes = tuple(n for n in sorted(ctx.node_status.total_slots)
+                      if n != avoid) or \
+            tuple(sorted(ctx.node_status.total_slots))
+        if should_speculate(done, elapsed, multiple, min_done, floor):
+            return Decision("speculate", 1, Schedule("round-robin", nodes))
+        return Decision("wait", 0, Schedule("round-robin", nodes))
+
+    return DecisionNode("speculation", fn)
+
+
+def recovery_node(max_reexec_frac: float = 0.5) -> DecisionNode:
+    """Failure-feedback node: heal a lost stage by lineage recompute or give
+    up and rerun the whole query?
+
+    Context contract (fed by the executor on ``StageLostError``):
+    ``profile["recovery.reexec_invocations"]`` — invocations the lineage
+    plan would re-execute, ``profile["recovery.total_invocations"]`` — the
+    query's total. Recompute while the plan re-executes at most
+    ``max_reexec_frac`` of the query; otherwise decide ``"rerun"`` (the
+    executor then surfaces ``RecoveryError`` for the caller to rerun).
+    """
+
+    def fn(ctx: DecisionContext) -> Decision:
+        n_re = int(ctx.profile.get("recovery.reexec_invocations", 0))
+        total = max(1, int(ctx.profile.get("recovery.total_invocations", 0)))
+        nodes = tuple(sorted(ctx.node_status.total_slots))
+        func = "recompute" if n_re <= max_reexec_frac * total else "rerun"
+        return Decision(func, n_re, Schedule("round-robin", nodes))
+
+    return DecisionNode("recovery", fn)
+
+
 @dataclass
 class Stage:
     """One stage of a decision workflow: a decision node plus downstream

@@ -13,6 +13,24 @@ from repro.runtime.store import (  # noqa: F401
     Blob,
     QuotaExceededError,
     ShuffleStore,
+    StageLostError,
+)
+from repro.runtime.faults import (  # noqa: F401
+    CrashFault,
+    FaultInjector,
+    FaultPlan,
+    InjectedCrashError,
+    InjectedFault,
+    RecoveryError,
+    SpeculationPolicy,
+    StageLossFault,
+    StragglerFault,
+)
+from repro.runtime.lineage import (  # noqa: F401
+    LineageLog,
+    RecoveryEvent,
+    StageLineage,
+    expected_recovery,
 )
 from repro.runtime.metrics import (  # noqa: F401
     InvocationRecord,

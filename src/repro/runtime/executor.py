@@ -20,6 +20,7 @@ substrate.
 
 from __future__ import annotations
 
+import threading
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass
 from typing import Mapping, Sequence
@@ -27,14 +28,17 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.core.controllers import GlobalController, PrivateController
+from repro.core.decisions import DecisionContext, DecisionNode
+from repro.runtime.faults import RecoveryError
 from repro.runtime.invoker import (
     InlineInvoker,
     Invocation,
     Invoker,
     ThreadPoolInvoker,
 )
+from repro.runtime.lineage import LineageLog, RecoveryEvent
 from repro.runtime.metrics import MetricsSink, StageMetrics
-from repro.runtime.store import ShuffleStore
+from repro.runtime.store import ShuffleStore, StageLostError
 
 
 @dataclass
@@ -45,6 +49,7 @@ class RuntimeStage:
     invocations: list[Invocation]
     deps: tuple[str, ...] = ()
     ephemeral_inputs: tuple[str, ...] = ()   # stages to GC once this finishes
+    decision: str | None = None              # decision node that emitted it
 
 
 class StagePlanner:
@@ -67,11 +72,30 @@ class StagePlanner:
 
 
 class DAGExecutor:
-    """Dependency-driven stage scheduler over a pluggable invoker."""
+    """Dependency-driven stage scheduler over a pluggable invoker.
 
-    def __init__(self, runtime: "Runtime", barrier: bool = False):
+    Failure handling: every admitted stage is registered with the runtime's
+    ``LineageLog``; when a read during a stage hits a lost shuffle stage
+    (``StageLostError`` — evicted ephemeral data, quota pressure, injected
+    fault), the executor asks the lineage for a bounded recovery plan and
+    re-executes only the lost partitions' producer invocations (recursively,
+    for producers whose own inputs are gone), then retries the stage's
+    not-yet-committed invocations. Recovery runs through the normal invoker,
+    so it honors slot-fairness gates and store quotas like first-run work.
+    ``recovery`` picks the policy: ``"lineage"`` (default), ``"rerun"``
+    (surface ``RecoveryError`` at the first loss — the caller reruns the
+    query), or a ``DecisionNode`` (e.g. ``repro.core.decisions.
+    recovery_node``) deciding per-loss from the plan size.
+    """
+
+    def __init__(self, runtime: "Runtime", barrier: bool = False,
+                 max_recoveries: int = 8,
+                 recovery: str | DecisionNode = "lineage"):
         self.runtime = runtime
         self.barrier = barrier
+        self.max_recoveries = max_recoveries
+        self.recovery = recovery
+        self._recover_lock = threading.Lock()
 
     def run(self, stages: Sequence[RuntimeStage],
             pc: PrivateController | None = None,
@@ -87,6 +111,7 @@ class DAGExecutor:
                     raise ValueError(f"duplicate stage {st.name!r}")
                 known[st.name] = st
                 pending[st.name] = st
+                self.runtime.lineage.register_stage(st)
             for st in batch:
                 missing = [d for d in st.deps if d not in known]
                 if missing:
@@ -146,7 +171,7 @@ class DAGExecutor:
                         f"dependencies")
                 name = ready[0]
             st = pending.pop(name)
-            invoker.run_stage(st.invocations, deps=dep_invs(st))
+            self._run_stage_recovering(st, dep_invs(st))
             finish(st)
 
     def _run_concurrent(self, pending, completed, invoker, dep_invs, finish):
@@ -161,8 +186,8 @@ class DAGExecutor:
                          if all(d in completed for d in st.deps)]
                 for name in ready:
                     st = pending.pop(name)
-                    fut = drivers.submit(invoker.run_stage, st.invocations,
-                                         deps=dep_invs(st))
+                    fut = drivers.submit(self._run_stage_recovering, st,
+                                         dep_invs(st))
                     in_flight[fut] = st
                 if not in_flight:
                     raise ValueError(
@@ -173,6 +198,103 @@ class DAGExecutor:
                     st = in_flight.pop(fut)
                     fut.result()        # propagate the first failure
                     finish(st)
+
+    # -- lineage-based recovery -----------------------------------------------
+
+    def _run_stage_recovering(self, st: RuntimeStage,
+                              deps: tuple[str, ...]) -> None:
+        """Run one stage, healing lost-stage reads via lineage recompute.
+
+        Each round retries only the stage's not-yet-committed invocations
+        (writer-label overwrite makes duplicates safe anyway). A loss
+        surfacing *during* recovery (a deeper input also gone, or a
+        concurrent eviction) is replanned on the next round against the
+        store's current state; ``max_recoveries`` bounds the rounds so an
+        unrecoverable store can never wedge the executor.
+        """
+        invoker = self.runtime.invoker
+        metrics = self.runtime.metrics
+        # only records born in *this* run count as committed: a rerun of the
+        # same app on the same Runtime must not skip invocations whose
+        # previous-attempt outputs were torn down with the old store state
+        first_record = len(metrics.records)
+        todo = list(st.invocations)
+        rounds = 0
+        while True:
+            try:
+                if todo:
+                    invoker.run_stage(todo, deps=deps)
+                return
+            except StageLostError as e:
+                rounds += 1
+                if rounds > self.max_recoveries:
+                    raise RecoveryError(
+                        f"stage {st.name!r}: recovery budget "
+                        f"({self.max_recoveries}) exhausted healing "
+                        f"{e.stage!r}") from e
+                try:
+                    self._recover(e)
+                except StageLostError:
+                    # deeper loss mid-recovery: replan next round against
+                    # the store's current state
+                    pass
+                ok = {r.name for r in metrics.records[first_record:]
+                      if r.stage == st.name and r.status == "ok"}
+                todo = [iv for iv in st.invocations if iv.name not in ok] \
+                    or list(st.invocations)
+
+    def _recover(self, err: StageLostError) -> None:
+        """Re-execute the lost partitions' producers, bottom-up."""
+        store = self.runtime.store
+        lineage = self.runtime.lineage
+        with self._recover_lock:
+            lost_now = store.lost_partitions(err.app, err.stage)
+            if not lost_now or (err.partitions is not None and
+                                not lost_now & set(err.partitions)):
+                return          # a concurrent driver already healed this
+            # heal every partition of the stage that is currently lost, not
+            # just the one read that tripped — a whole-stage loss read
+            # partition-by-partition must cost one recovery round, not one
+            # per partition (which would burn max_recoveries spuriously)
+            target = sorted(lost_now)
+            plan = lineage.recovery_plan(err.app, err.stage, target,
+                                         store, metrics=self.runtime.metrics)
+            if plan is None:
+                raise RecoveryError(
+                    f"{err.app!r}/{err.stage!r} lost but has no lineage "
+                    f"(base input?): only a whole-query rerun can restore "
+                    f"it") from err
+            n_invs = sum(len(invs) for _, _, invs in plan)
+            if self._recovery_choice(err, n_invs) == "rerun":
+                raise RecoveryError(
+                    f"{err.app!r}/{err.stage!r}: recovery policy chose "
+                    f"whole-query rerun over recomputing {n_invs} "
+                    f"invocations") from err
+            for data_stage, parts, invs in plan:
+                if invs:
+                    self.runtime.invoker.run_stage(invs, deps=())
+                # producers re-ran: any still-absent healed partition is
+                # genuinely empty, not missing — but only the partitions
+                # this plan covered
+                store.clear_lost(err.app, data_stage,
+                                 None if parts is None else sorted(parts))
+            self.runtime.recoveries.append(RecoveryEvent(
+                err.app, err.stage, tuple(target),
+                tuple(ds for ds, _, _ in plan), n_invs))
+
+    def _recovery_choice(self, err: StageLostError, n_invs: int) -> str:
+        if isinstance(self.recovery, DecisionNode):
+            ctx = DecisionContext(
+                node_status=self.runtime.gc.node_status(),
+                profile={
+                    "recovery.lost_stage": err.stage,
+                    "recovery.reexec_invocations": n_invs,
+                    "recovery.total_invocations":
+                        self.runtime.lineage.total_invocations(err.app),
+                })
+            return "rerun" if self.recovery.decide(ctx).func == "rerun" \
+                else "recompute"
+        return "rerun" if self.recovery == "rerun" else "recompute"
 
 
 class Runtime:
@@ -200,6 +322,8 @@ class Runtime:
             else:
                 raise ValueError(f"unknown invoker backend {invoker!r}")
         self.invoker = invoker
+        self.lineage = LineageLog()
+        self.recoveries: list[RecoveryEvent] = []
 
     def seed(self, app: str, stage: str,
              partitions: Mapping[int, object]) -> list[tuple[int, int]]:
@@ -211,9 +335,13 @@ class Runtime:
     def execute(self, stages: Sequence[RuntimeStage],
                 pc: PrivateController | None = None,
                 planner: StagePlanner | None = None,
-                barrier: bool = False) -> dict[str, StageMetrics]:
-        return DAGExecutor(self, barrier=barrier).run(stages, pc=pc,
-                                                      planner=planner)
+                barrier: bool = False, max_recoveries: int = 8,
+                recovery: str | DecisionNode = "lineage",
+                ) -> dict[str, StageMetrics]:
+        return DAGExecutor(self, barrier=barrier,
+                           max_recoveries=max_recoveries,
+                           recovery=recovery).run(stages, pc=pc,
+                                                  planner=planner)
 
     def result(self, app: str, stage: str = "result", column: str = "sum",
                ) -> np.ndarray:

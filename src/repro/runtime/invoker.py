@@ -19,11 +19,12 @@ Two backends:
 from __future__ import annotations
 
 import time
-from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Mapping, Sequence
 
 from repro.core.controllers import GlobalController
+from repro.runtime.faults import InjectedCrashError
 from repro.runtime.metrics import InvocationRecord, MetricsSink
 from repro.runtime.store import ShuffleStore
 
@@ -75,6 +76,7 @@ class FnContext:
         self.bytes_in = 0
         self.bytes_out = 0
         self.reads_by_node: dict[int, int] = {}
+        self.writes: list[tuple[str, int]] = []   # lineage: (stage, part)
 
     def get(self, stage: str, partition: int):
         for src, b in self._store.read_sources(
@@ -107,6 +109,7 @@ class FnContext:
             pass
         self.bytes_out += self._store.put(
             self.app, stage, partition, table, self.node, writer=self.writer)
+        self.writes.append((stage, partition))
 
     def partitions(self, stage: str) -> list[int]:
         return self._store.partitions(self.app, stage)
@@ -142,7 +145,7 @@ class Invoker:
                  metrics: MetricsSink | None = None, max_attempts: int = 5,
                  starve_wait: float = 0.0,
                  intercept: Callable[[Invocation, int], None] | None = None,
-                 gate: SlotGate | None = None):
+                 gate: SlotGate | None = None, injector=None):
         self.gc = gc
         self.store = store
         self.metrics = metrics or MetricsSink()
@@ -150,6 +153,7 @@ class Invoker:
         self.starve_wait = starve_wait
         self.intercept = intercept
         self.gate = gate
+        self.injector = injector
         self.registry: Mapping[str, Callable[[FnContext], Any]] | None = None
 
     def _resolve(self, name: str) -> Callable[[FnContext], Any]:
@@ -186,29 +190,59 @@ class Invoker:
                 # churn must not burn the retry budget), then retry
                 self.gc.wait_for_release(epoch, timeout=wait, node=inv.node)
                 continue
+            crashed = None
+            # timed from claim commit: injected latency (stragglers) is part
+            # of the invocation's observed duration, which is what the
+            # speculation policy and the tail benchmarks reason about
+            t0 = time.perf_counter()
             try:
                 try:
                     if self.intercept is not None:
                         self.intercept(inv, attempt)
-                    t0 = time.perf_counter()
+                    if self.injector is not None:
+                        self.injector.before_body(inv, attempt)
                     ctx = FnContext(self.store, inv)
                     fn(ctx)
-                except Exception:
-                    # any failure while the claim is live (intercept hook
-                    # included) must release the slot, not leak it
+                    if self.injector is not None:
+                        self.injector.after_body(inv, attempt)
+                except InjectedCrashError as e:
+                    # an injected function crash: release the slot, record
+                    # the death, and retry on the next attempt (stateless
+                    # functions + writer-label overwrite make a
+                    # crash-after-write retry safe — it replaces, never
+                    # duplicates)
+                    crashed = e
                     self.gc.finish(claim)
+                except BaseException:
+                    # any other failure while the claim is live — the
+                    # registered function itself raising, the intercept
+                    # hook, a StageLostError from the store — must release
+                    # the slot, not leak it (a leaked slot deadlocks
+                    # FairShareGate accounting)
+                    self.gc.finish(claim)
+                    self.metrics.record(InvocationRecord(
+                        inv.name, inv.app, inv.stage, inv.func, inv.node,
+                        attempt, "error", t0, time.perf_counter(), deps=deps,
+                        priority=inv.priority))
                     raise
-                t1 = time.perf_counter()
-                committed = self.gc.finish(claim)
+                if crashed is None:
+                    t1 = time.perf_counter()
+                    committed = self.gc.finish(claim)
             finally:
                 if self.gate is not None:
                     self.gate.release(inv)
+            if crashed is not None:
+                self.metrics.record(InvocationRecord(
+                    inv.name, inv.app, inv.stage, inv.func, inv.node,
+                    attempt, "crashed", t0, time.perf_counter(), deps=deps,
+                    priority=inv.priority))
+                continue
             self.metrics.record(InvocationRecord(
                 inv.name, inv.app, inv.stage, inv.func, inv.node, attempt,
                 "ok" if committed else "preempted", t0, t1,
                 bytes_in=ctx.bytes_in, bytes_out=ctx.bytes_out,
                 reads_by_node=dict(ctx.reads_by_node), deps=deps,
-                priority=inv.priority))
+                priority=inv.priority, writes=tuple(ctx.writes)))
             if committed:
                 return
         self.metrics.record(InvocationRecord(
@@ -216,8 +250,9 @@ class Invoker:
             self.max_attempts, "starved", time.perf_counter(),
             time.perf_counter(), deps=deps, priority=inv.priority))
         raise InvocationError(
-            f"{inv.name}: no slot after {self.max_attempts} attempts "
-            f"(preempted or starved by higher-priority claims)")
+            f"{inv.name}: no slot committed after {self.max_attempts} "
+            f"attempts (preempted/starved by higher-priority claims, or "
+            f"repeatedly crashed)")
 
     def run_stage(self, invocations: Sequence[Invocation],
                   deps: tuple[str, ...] = ()) -> None:
@@ -234,7 +269,17 @@ class InlineInvoker(Invoker):
 
 
 class ThreadPoolInvoker(Invoker):
-    """Real parallelism: one worker per in-flight function instance."""
+    """Real parallelism: one worker per in-flight function instance.
+
+    With a ``speculation`` policy installed (``SpeculationPolicy``,
+    ``repro.runtime.faults``) the invoker polls in-flight invocations and
+    feeds their elapsed times to the policy's failure-feedback decision
+    node; stragglers get a backup launched on another node, first
+    completion wins (both copies write under the same writer label, so the
+    loser's identical output overwrites harmlessly), and ``run_stage``
+    returns without waiting for the losers. ``drain()`` joins any such
+    still-running losers — call it before asserting slot-leak invariants.
+    """
 
     parallel = True
 
@@ -242,15 +287,22 @@ class ThreadPoolInvoker(Invoker):
                  metrics: MetricsSink | None = None, max_workers: int = 8,
                  max_attempts: int = 200, starve_wait: float = 0.0,
                  intercept: Callable[[Invocation, int], None] | None = None,
-                 gate: SlotGate | None = None):
+                 gate: SlotGate | None = None, injector=None,
+                 speculation=None):
         super().__init__(gc, store, metrics, max_attempts=max_attempts,
                          starve_wait=starve_wait, intercept=intercept,
-                         gate=gate)
+                         gate=gate, injector=injector)
         self.max_workers = max_workers
+        self.speculation = speculation
+        self.speculations: list[tuple[str, int, int, float]] = []
+        self._pools: list[ThreadPoolExecutor] = []
 
     def run_stage(self, invocations: Sequence[Invocation],
                   deps: tuple[str, ...] = ()) -> None:
         if not invocations:
+            return
+        if self.speculation is not None and len(invocations) > 1:
+            self._run_stage_speculative(list(invocations), deps)
             return
         with ThreadPoolExecutor(
                 max_workers=min(self.max_workers, len(invocations))) as pool:
@@ -258,3 +310,66 @@ class ThreadPoolInvoker(Invoker):
                        for inv in invocations]
             for f in futures:
                 f.result()    # propagate the first failure
+
+    def _run_stage_speculative(self, invocations: list[Invocation],
+                               deps: tuple[str, ...]) -> None:
+        spec = self.speculation
+        n = len(invocations)
+        pool = ThreadPoolExecutor(
+            max_workers=min(2 * self.max_workers, 2 * n))
+        self._pools.append(pool)
+        futs: dict = {}                       # future -> index
+        copies = [1] * n                      # in-flight copies per index
+        started = []
+        for i, inv in enumerate(invocations):
+            started.append(time.perf_counter())
+            futs[pool.submit(self._execute_one, inv, deps)] = i
+        finished: set[int] = set()
+        backed: set[int] = set()
+        done_s: list[float] = []
+        errors: dict[int, BaseException] = {}
+        try:
+            while len(finished) < n:
+                if not futs:
+                    raise next(iter(errors.values()))
+                done, _ = wait(set(futs), timeout=spec.interval,
+                               return_when=FIRST_COMPLETED)
+                now = time.perf_counter()
+                for f in done:
+                    i = futs.pop(f)
+                    copies[i] -= 1
+                    exc = f.exception()
+                    if exc is None:
+                        if i not in finished:
+                            finished.add(i)
+                            done_s.append(now - started[i])
+                    else:
+                        errors.setdefault(i, exc)
+                        if i not in finished and copies[i] == 0:
+                            raise exc   # no surviving copy: the stage fails
+                status = None
+                for i, inv in enumerate(invocations):
+                    if i in finished or i in backed:
+                        continue
+                    if status is None:
+                        status = self.gc.node_status()
+                    node = spec.backup_node(inv, now - started[i], done_s,
+                                            status)
+                    if node is None:
+                        continue
+                    backed.add(i)
+                    self.speculations.append(
+                        (inv.name, inv.node, node, now - started[i]))
+                    backup = replace(inv, node=node)
+                    futs[pool.submit(self._execute_one, backup, deps)] = i
+                    copies[i] += 1
+        finally:
+            # first-completion-wins: do NOT wait for losing copies — they
+            # finish in the background (drain() joins them)
+            pool.shutdown(wait=False)
+
+    def drain(self) -> None:
+        """Join speculation losers still running in the background."""
+        for pool in self._pools:
+            pool.shutdown(wait=True)
+        self._pools.clear()

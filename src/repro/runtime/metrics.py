@@ -23,7 +23,7 @@ class InvocationRecord:
     func: str
     node: int
     attempt: int
-    status: str                    # "ok" | "preempted" | "starved"
+    status: str          # "ok" | "preempted" | "starved" | "crashed" | "error"
     started: float
     finished: float
     bytes_in: int = 0
@@ -31,6 +31,10 @@ class InvocationRecord:
     reads_by_node: Mapping[int, int] = field(default_factory=dict)
     deps: tuple[str, ...] = ()
     priority: int = 0
+    # (data_stage, partition) pairs the invocation wrote — the lineage
+    # refinement that lets recovery replay only the lost partitions' actual
+    # producers instead of every registered one
+    writes: tuple = ()
 
     @property
     def seconds(self) -> float:
@@ -42,6 +46,7 @@ class StageMetrics:
     invocations: int = 0
     ok: int = 0
     preempted: int = 0
+    crashed: int = 0
     seconds: float = 0.0
     bytes_in: int = 0
     bytes_out: int = 0
@@ -75,6 +80,7 @@ class MetricsSink:
             m.invocations += 1
             m.ok += r.status == "ok"
             m.preempted += r.status == "preempted"
+            m.crashed += r.status == "crashed"
             m.seconds += r.seconds
             m.bytes_in += r.bytes_in
             m.bytes_out += r.bytes_out
@@ -109,6 +115,7 @@ class MetricsSink:
             out[f"{name}.bytes_in"] = m.bytes_in
             out[f"{name}.bytes_out"] = m.bytes_out
             out[f"{name}.preempted"] = m.preempted
+            out[f"{name}.crashed"] = m.crashed
         return out
 
     def format_table(self, app: str) -> str:

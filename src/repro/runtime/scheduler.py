@@ -83,6 +83,7 @@ class QueryResult:
     started: float = 0.0           # admission (execution begin)
     finished: float = 0.0
     decisions: list = field(default_factory=list)   # (stage, Decision) seq
+    recoveries: list = field(default_factory=list)  # RecoveryEvents healed
 
     @property
     def ok(self) -> bool:
@@ -213,13 +214,18 @@ class QueryScheduler:
 
     def __init__(self, runtime, policy: str = "fair_share",
                  max_concurrent: int | None = None,
-                 gate_timeout: float = 60.0, release_stores: bool = False):
+                 gate_timeout: float = 60.0, release_stores: bool = False,
+                 recovery="lineage", max_recoveries: int = 8):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; pick from {POLICIES}")
         self.runtime = runtime
         self.policy = policy
         self.max_concurrent = max_concurrent
         self.release_stores = release_stores
+        # failure-handling policy shared by every admitted query: lineage
+        # recompute (default), whole-query rerun, or a recovery DecisionNode
+        self.recovery = recovery
+        self.max_recoveries = max_recoveries
         self.jobs: list[QueryJob] = []
         self.results: dict[str, QueryResult] = {}
         self.gate: FairShareGate | None = None
@@ -294,12 +300,16 @@ class QueryScheduler:
                 self.runtime, job.fact, job.dim, strategy, app=job.app,
                 priority=job.priority, num_groups=job.num_groups,
                 workflow=job.workflow)
-            self.runtime.execute(plan.initial_stages(), pc=pc, planner=plan)
+            self.runtime.execute(plan.initial_stages(), pc=pc, planner=plan,
+                                 recovery=self.recovery,
+                                 max_recoveries=self.max_recoveries)
             res.sums = self.runtime.result(job.app)
             res.decisions = list(plan.run.sequence)
         except BaseException as e:  # noqa: BLE001 - surfaced via QueryResult
             res.error = e
         finally:
+            res.recoveries = [ev for ev in self.runtime.recoveries
+                              if ev.app == job.app]
             res.finished = time.monotonic()
             if self.gate is not None:
                 self.gate.unregister(job.app)

@@ -18,7 +18,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass
-from typing import Mapping
+from typing import Mapping, Sequence
 
 from repro.core.decisions import DataDist, partition_skew
 
@@ -35,6 +35,30 @@ class Blob:
 
 class QuotaExceededError(RuntimeError):
     """A write could not be admitted under the application's store quota."""
+
+
+class StageLostError(RuntimeError):
+    """A read hit shuffle data that *was* written but has since been lost.
+
+    Ephemeral storage may evict consumed stages (quota pressure), the
+    executor reclaims ephemeral inputs, and a fault plan may kill stage data
+    outright — in all three cases the store leaves a *lost tombstone* per
+    evicted partition, so a later reader sees a typed error instead of a
+    silent ``None`` (which would corrupt the query). The executor catches
+    this error and triggers lineage-based recompute of the lost partitions'
+    producer invocations (``repro.runtime.lineage``).
+    """
+
+    def __init__(self, app: str, stage: str, partitions=None):
+        self.app = app
+        self.stage = stage
+        self.partitions = tuple(partitions) if partitions is not None \
+            else None
+        which = "all partitions" if self.partitions is None \
+            else f"partitions {list(self.partitions)}"
+        super().__init__(
+            f"stage {app!r}/{stage!r}: {which} lost (evicted or failed) "
+            f"after being written")
 
 
 class ShuffleStore:
@@ -85,6 +109,13 @@ class ShuffleStore:
         # pressure reclaims it (insertion order == LRU eviction order)
         self._sealed: dict[tuple[str, str], bool] = {}
         self.evictions: list[tuple[str, str, int]] = []
+        # lost tombstones: (app, stage) -> partition ids whose written data
+        # was evicted/killed; reads raise StageLostError until a producer
+        # rewrites the partition (or recovery clears the marker)
+        self._lost: dict[tuple[str, str], set[int]] = {}
+        # fault-injection hook: consulted at the top of every ``get`` so a
+        # FaultPlan can lose a stage deterministically on its k-th read
+        self.injector = None
 
     # -- quotas ---------------------------------------------------------------
 
@@ -106,11 +137,13 @@ class ShuffleStore:
 
     def _evict_one(self, app: str) -> bool:
         """Reclaim the app's least-recently-sealed stage; caller holds the
-        lock. Returns True if anything was freed."""
+        lock. Returns True if anything was freed. The evicted stage leaves a
+        lost tombstone: a later reader gets ``StageLostError`` (recoverable
+        via lineage), never silently-empty data."""
         for key in self._sealed:
             if key[0] != app:
                 continue
-            freed = self.delete_stage(*key)
+            freed = self.lose_stage(*key)
             self.evictions.append((key[0], key[1], freed))
             return True
         return False
@@ -164,6 +197,13 @@ class ShuffleStore:
             time.sleep(nbytes / self.net_bw)
         with self._cond:
             self._admit(app, stage, partition, writer, nbytes)
+            lost = self._lost.get((app, stage))
+            if lost is not None:
+                # a producer (retry, speculation backup, lineage recompute)
+                # rewriting a lost partition heals it
+                lost.discard(partition)
+                if not lost:
+                    del self._lost[(app, stage)]
             parts = self._stages.setdefault((app, stage), {})
             blobs = parts.setdefault(partition, {})
             old = blobs.get(writer)
@@ -200,11 +240,20 @@ class ShuffleStore:
         """Concatenate every writer's slice of a partition (writer-sorted, so
         content is deterministic under concurrent invokers). Remote reads are
         charged to the blob's home node — this is the shuffle/broadcast
-        traffic the simulator's NIC model prices. Returns None if absent."""
+        traffic the simulator's NIC model prices. Returns None if absent;
+        raises ``StageLostError`` if the partition was written and then
+        evicted/killed (the reader must never see silently-missing data)."""
         remote = 0
         with self._lock:
+            if self.injector is not None:
+                # fault-injection: a plan may lose this stage right now (the
+                # k-th read) — the lost check below then raises
+                self.injector.on_get(app, stage, partition, node)
             blobs = self._stages.get((app, stage), {}).get(partition)
             if not blobs:
+                lost = self._lost.get((app, stage))
+                if lost and partition in lost:
+                    raise StageLostError(app, stage, (partition,))
                 return None
             ordered = [blobs[w] for w in sorted(blobs)]
             if account:
@@ -226,8 +275,20 @@ class ShuffleStore:
         return out
 
     def partitions(self, app: str, stage: str) -> list[int]:
+        """Known partition ids: written ∪ lost. Lost ids are included so an
+        all-partitions reader (``FnContext.get_all``) hits the tombstone and
+        raises instead of silently skipping evicted data."""
         with self._lock:
-            return sorted(self._stages.get((app, stage), {}))
+            return sorted(set(self._stages.get((app, stage), {})) |
+                          self._lost.get((app, stage), set()))
+
+    def partition_state(self, app: str, stage: str,
+                        ) -> tuple[set[int], set[int]]:
+        """``(written, lost)`` partition-id sets — the residency view the
+        lineage recovery planner consults."""
+        with self._lock:
+            return (set(self._stages.get((app, stage), {})),
+                    set(self._lost.get((app, stage), set())))
 
     # -- accounting views ------------------------------------------------------
 
@@ -287,19 +348,78 @@ class ShuffleStore:
     def reclaim_stage(self, app: str, stage: str) -> int:
         """Ephemeral-input GC entry point for the executor: under a quota the
         stage is sealed (lazily evicted when the app needs headroom),
-        otherwise dropped immediately. Returns bytes freed now."""
+        otherwise dropped immediately — leaving a lost tombstone, so a
+        late reader (speculation loser, recovery replay) gets a typed
+        ``StageLostError`` rather than silently-empty data. Returns bytes
+        freed now."""
         with self._cond:
             if self._quotas.get(app) is not None:
                 self.seal(app, stage)
                 return 0
-            return self.delete_stage(app, stage)
+            return self.lose_stage(app, stage)
+
+    def lose_stage(self, app: str, stage: str,
+                   partitions: Sequence[int] | None = None) -> int:
+        """Evict written shuffle data (all partitions, or just
+        ``partitions``) and leave lost tombstones: later reads of the
+        evicted partitions raise ``StageLostError`` until a producer
+        rewrites them. This is the store half of the fault model — stage
+        loss of disaggregated ephemeral storage (ServerMix's core tension)
+        — and of ephemeral-input GC. Returns bytes freed."""
+        with self._cond:
+            key = (app, stage)
+            parts = self._stages.get(key)
+            if not parts:
+                return 0
+            targets = sorted(parts) if partitions is None else \
+                [p for p in partitions if p in parts]
+            lost = self._lost.setdefault(key, set())
+            freed = 0
+            for p in targets:
+                for b in parts.pop(p).values():
+                    self.resident_bytes[b.node] = \
+                        self.resident_bytes.get(b.node, 0) - b.nbytes
+                    freed += b.nbytes
+                lost.add(p)
+            if not lost:
+                del self._lost[key]
+            if not parts:
+                del self._stages[key]
+                self._sealed.pop(key, None)
+            if freed:
+                self.app_bytes[app] = self.app_bytes.get(app, 0) - freed
+                self._cond.notify_all()     # wake quota-blocked writers
+            return freed
+
+    def clear_lost(self, app: str, stage: str,
+                   partitions: Sequence[int] | None = None) -> None:
+        """Drop lost tombstones after recovery re-executed the producers:
+        any partition still absent is now *genuinely* empty (its producers
+        wrote nothing), not missing."""
+        with self._lock:
+            key = (app, stage)
+            lost = self._lost.get(key)
+            if lost is None:
+                return
+            if partitions is None:
+                del self._lost[key]
+                return
+            lost.difference_update(partitions)
+            if not lost:
+                del self._lost[key]
+
+    def lost_partitions(self, app: str, stage: str) -> set[int]:
+        with self._lock:
+            return set(self._lost.get((app, stage), set()))
 
     def delete_stage(self, app: str, stage: str) -> int:
-        """Drop a stage's blobs; returns bytes reclaimed (ephemerality is the
+        """Drop a stage's blobs *and* its lost tombstones — intentional
+        teardown, not failure; returns bytes reclaimed (ephemerality is the
         point: shuffle state outlives only its consumers)."""
         with self._cond:
             parts = self._stages.pop((app, stage), {})
             self._sealed.pop((app, stage), None)
+            self._lost.pop((app, stage), None)
             freed = 0
             for blobs in parts.values():
                 for b in blobs.values():
@@ -316,4 +436,6 @@ class ShuffleStore:
         with self._cond:
             for key in [k for k in self._stages if k[0] == app]:
                 freed += self.delete_stage(*key)
+            for key in [k for k in self._lost if k[0] == app]:
+                del self._lost[key]    # fully-lost stages have no blobs left
         return freed

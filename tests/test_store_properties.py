@@ -22,7 +22,7 @@ import pytest
 
 from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
 
-from repro.runtime import QuotaExceededError, ShuffleStore
+from repro.runtime import QuotaExceededError, ShuffleStore, StageLostError
 
 
 class FakeTable:
@@ -152,7 +152,10 @@ def test_quota_put_evicts_sealed_stage_lru():
     store.seal("app", "old2")
     # 30 more bytes do not fit 100: the LRU sealed stage (old1) is evicted
     store.put("app", "new", 0, FakeTable(30, 1), node=0, writer="w")
-    assert store.get("app", "old1", 0, node=0) is None
+    # evicted-but-was-written data reads as a typed loss (recoverable via
+    # lineage), never as silently-absent None
+    with pytest.raises(StageLostError):
+        store.get("app", "old1", 0, node=0)
     assert store.get("app", "old2", 0, node=0) is not None
     assert store.app_bytes["app"] == 70
     assert store.evictions == [("app", "old1", 40)]
