@@ -2,7 +2,7 @@
 roofline report. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fig4|fig7|fig8|roofline|executor|sharing|faults]
+        [--only fig4|fig7|fig8|roofline|executor|sharing|faults|dataplane]
 """
 
 from __future__ import annotations
@@ -14,6 +14,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks import (
+    bench_dataplane,
     bench_executor,
     bench_faults,
     bench_sharing,
@@ -28,7 +29,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig4", "fig7", "fig8", "roofline", "executor",
-                             "sharing", "faults"])
+                             "sharing", "faults", "dataplane"])
     args = ap.parse_args(argv)
 
     sections = {
@@ -39,6 +40,7 @@ def main(argv=None) -> None:
         "executor": bench_executor.main,
         "sharing": bench_sharing.main,
         "faults": bench_faults.main,
+        "dataplane": bench_dataplane.main,
     }
     if args.only:
         sections = {args.only: sections[args.only]}

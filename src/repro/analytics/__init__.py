@@ -33,5 +33,6 @@ from repro.analytics.query import (  # noqa: F401
     prepare_query_plan,
     reference_query_numpy,
     resolve_join_decision,
+    split_partitions,
     synth_query_tables,
 )

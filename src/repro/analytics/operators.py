@@ -1,145 +1,50 @@
-"""Analytics operators in JAX — the data plane of the case study.
+"""Table-level analytics operators — thin columnar shells over the kernel
+dispatch layer (``repro.kernels.ops``).
 
 Two join implementations with genuinely different execution structure (the
 paper's Fig. 3):
 
-  * ``sort_merge_join`` — sort both sides, linear merge via searchsorted
-    (the shuffle-heavy plan: records with equal keys must be co-located).
-  * ``hash_join``       — build an open-addressing hash table over the
-    (smaller) build side, probe with the (larger) probe side (the
+  * ``sort_merge_join_indices`` — sort both sides, linear merge via
+    searchsorted (the shuffle-heavy plan: records with equal keys must be
+    co-located).
+  * ``hash_join_indices``       — build an open-addressing hash table over
+    the (smaller) build side, probe with the (larger) probe side (the
     broadcast-heavy plan).
 
 Join contract: the build side has unique keys (fact ⋈ dim); output is one row
-per probe row with a ``found`` mask — static shapes, as JAX requires. The
-radix ``partition`` shuffle primitive mirrors the Pallas kernel in
-``repro/kernels/partition.py`` (kernel validated against this reference).
+per probe row with a ``found`` mask — static shapes, as JAX requires.
+
+Since the vectorized-data-plane refactor the jitted primitives themselves
+(hashing, partition permutation, join index computation, segment sums) live
+in ``repro.kernels.ops``, which dispatches each to the Pallas kernel on TPU
+or the jitted jnp fallback elsewhere; this module only lifts them to
+``Table``s. The names below re-export the primitives so existing callers
+and tests keep working.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.analytics.table import Table
-
-HASH_MULT = jnp.uint32(0x9E3779B1)   # Knuth multiplicative hash
-EMPTY = jnp.int32(-1)
-
-
-def _hash(keys: jax.Array, bits: int) -> jax.Array:
-    h = keys.astype(jnp.uint32) * HASH_MULT
-    return (h >> (32 - bits)).astype(jnp.int32)
-
-
-# -- partition (shuffle primitive) ---------------------------------------------
-
-
-@partial(jax.jit, static_argnames=("num_partitions",))
-def partition_ids(keys: jax.Array, num_partitions: int) -> jax.Array:
-    """Radix/hash partition id per row."""
-    bits = max(1, int(np.ceil(np.log2(num_partitions))))
-    return _hash(keys, bits) % num_partitions
-
-
-@partial(jax.jit, static_argnames=("num_partitions",))
-def partition_permutation(keys: jax.Array, num_partitions: int):
-    """Stable permutation grouping rows by partition + per-partition counts."""
-    pids = partition_ids(keys, num_partitions)
-    order = jnp.argsort(pids, stable=True)
-    counts = jnp.bincount(pids, length=num_partitions)
-    return order, counts, pids
-
-
-# -- joins -----------------------------------------------------------------------
-
-
-@jax.jit
-def sort_merge_join_indices(probe_keys: jax.Array, build_keys: jax.Array):
-    """Sort-merge: sort build side, binary-merge probe side.
-
-    Returns (idx_into_build, found) aligned with probe rows.
-    """
-    build_order = jnp.argsort(build_keys)
-    sorted_build = build_keys[build_order]
-    pos = jnp.searchsorted(sorted_build, probe_keys)
-    pos = jnp.clip(pos, 0, build_keys.shape[0] - 1)
-    found = sorted_build[pos] == probe_keys
-    idx = jnp.where(found, build_order[pos], 0)
-    return idx, found
-
-
-def _hash_table_size(n: int) -> int:
-    # load factor <= 0.25: linear-probing cluster lengths stay far below
-    # the probe budget even for multi-million-row build sides
-    return max(16, int(2 ** np.ceil(np.log2(4 * n))))
-
-
-@partial(jax.jit, static_argnames=("max_probes",))
-def build_hash_table(build_keys: jax.Array, max_probes: int = 16):
-    """Open-addressing (linear probing) insert of unique build keys.
-
-    Parallel insertion: each round, every unplaced key writes its row index
-    to its current probe slot; scatter conflicts resolve last-writer-wins,
-    losers advance to the next probe position. With load factor <= 0.5 this
-    converges in a handful of rounds.
-    """
-    n = build_keys.shape[0]
-    cap = _hash_table_size(n)
-    bits = int(np.log2(cap))
-    slots = jnp.full((cap,), EMPTY)            # stored row index, -1 = empty
-    h0 = _hash(build_keys, bits)
-    rows = jnp.arange(n, dtype=jnp.int32)
-
-    def round_(p, carry):
-        slots, placed = carry
-        pos = (h0 + p) % cap
-        # only unplaced keys contending for currently-empty slots
-        want = jnp.logical_and(jnp.logical_not(placed), slots[pos] == EMPTY)
-        cand = jnp.where(want, rows, EMPTY)
-        tgt = jnp.where(want, pos, cap)        # park non-contenders off-table
-        slots_ext = jnp.concatenate([slots, jnp.full((1,), EMPTY)])
-        slots_ext = slots_ext.at[tgt].max(cand)   # max = deterministic winner
-        slots = slots_ext[:cap]
-        placed = jnp.logical_or(placed, slots[pos] == rows)
-        return slots, placed
-
-    slots, _ = jax.lax.fori_loop(0, max_probes, round_,
-                                 (slots, jnp.zeros((n,), bool)))
-    return slots
-
-
-@partial(jax.jit, static_argnames=("max_probes",))
-def hash_join_indices(probe_keys: jax.Array, build_keys: jax.Array,
-                      slots: jax.Array, max_probes: int = 16):
-    """Probe the hash table. Returns (idx_into_build, found) per probe row."""
-    cap = slots.shape[0]
-    bits = int(np.log2(cap))
-    h = _hash(probe_keys, bits)
-
-    def probe(p, carry):
-        idx, found = carry
-        pos = (h + p) % cap
-        cand = slots[pos]
-        hit = jnp.logical_and(
-            cand != EMPTY,
-            jnp.logical_and(build_keys[jnp.maximum(cand, 0)] == probe_keys,
-                            jnp.logical_not(found)))
-        idx = jnp.where(hit, cand, idx)
-        return idx, jnp.logical_or(found, hit)
-
-    idx0 = jnp.zeros_like(probe_keys)
-    found0 = jnp.zeros(probe_keys.shape, bool)
-    idx, found = jax.lax.fori_loop(0, max_probes, probe, (idx0, found0))
-    return idx, found
+from repro.kernels.ops import (  # noqa: F401  (re-exported primitives)
+    EMPTY,
+    HASH_MULT,
+    build_hash_table,
+    grouping_indices,
+    hash_join_indices,
+    partition_ids,
+    partition_permutation,
+    segment_sum,
+    sort_merge_join_indices,
+)
 
 
 def join(probe: Table, build: Table, key: str = "key",
          method: str = "hash", suffix: str = "_b") -> Table:
     """Inner-join (probe ⋈ build); returns probe columns + matched build
-    columns + 'found' mask column."""
+    columns + 'found' mask column. The index computation is one kernel
+    dispatch per side (build + probe for hash, sort + merge for merge)."""
     pk, bk = probe[key], build[key]
     if method == "hash":
         slots = build_hash_table(bk)
@@ -159,16 +64,12 @@ def join(probe: Table, build: Table, key: str = "key",
     return Table(cols)
 
 
-# -- aggregation ------------------------------------------------------------------
+def groupby_sum(group_ids, values, num_groups: int):
+    """Segment-sum values by group id (kernel-dispatched)."""
+    return segment_sum(values, group_ids, num_groups)
 
 
-@partial(jax.jit, static_argnames=("num_groups",))
-def groupby_sum(group_ids: jax.Array, values: jax.Array, num_groups: int):
-    """segment-sum values by group id."""
-    return jax.ops.segment_sum(values, group_ids, num_segments=num_groups)
-
-
-def filter_table(t: Table, keep: jax.Array) -> Table:
+def filter_table(t: Table, keep) -> Table:
     """Static-shape filter: zero out dropped rows, keep a validity column."""
     cols = {k: jnp.where(keep if v.ndim == 1 else keep[:, None], v, 0)
             for k, v in t.columns.items()}

@@ -221,28 +221,31 @@ def estimate_scan_output(fact, name: str = "A_scanned",
 
 
 def _inv(app: str, stage: str, i: int, fn: str, node: int, params: dict,
-         priority: int):
+         priority: int, batchable: bool = False):
     from repro.runtime.invoker import Invocation
     return Invocation(f"{app}/{stage}/{i}", app, stage, i, fn, node,
-                      priority=priority, params=params)
+                      priority=priority, params=params, batchable=batchable)
 
 
 def scan_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                 dim_layout: Sequence[tuple[int, int]],
                 priority: int = 0) -> list:
     """Data-local scan stages; independent, so the dependency-driven
-    executor runs them concurrently under a parallel invoker."""
+    executor runs them concurrently under a parallel invoker. Scans are
+    map-shaped (one partition in, one out): ``batchable`` lets the invoker
+    coalesce co-located instances into one slot claim."""
     from repro.runtime.executor import RuntimeStage
     return [
         RuntimeStage("scan_fact", [
             _inv(app, "scan_fact", i, "scan_filter", node,
                  {"src": "input/fact", "dst": "scan_fact", "partition": i,
-                  "filter_col": "v0", "filter_gt": 0.0}, priority)
+                  "filter_col": "v0", "filter_gt": 0.0}, priority,
+                 batchable=True)
             for i, node in fact_layout], decision="scan"),
         RuntimeStage("scan_dim", [
             _inv(app, "scan_dim", j, "scan_filter", node,
                  {"src": "input/dim", "dst": "scan_dim", "partition": j},
-                 priority)
+                 priority, batchable=True)
             for j, node in dim_layout], decision="scan"),
     ]
 
@@ -286,13 +289,15 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
             RuntimeStage("shuffle_fact", [
                 _inv(app, "shuffle_fact", i, "shuffle_write", node,
                      {"src": "scan_fact", "dst": "fact_buckets",
-                      "partition": i, "num_buckets": n_join}, priority)
+                      "partition": i, "num_buckets": n_join}, priority,
+                     batchable=True)
                 for i, node in fact_layout], deps=("scan_fact",),
                 decision="exchange"),
             RuntimeStage("shuffle_dim", [
                 _inv(app, "shuffle_dim", j, "shuffle_write", node,
                      {"src": "scan_dim", "dst": "dim_buckets",
-                      "partition": j, "num_buckets": n_join}, priority)
+                      "partition": j, "num_buckets": n_join}, priority,
+                     batchable=True)
                 for j, node in dim_layout], deps=("scan_dim",),
                 decision="exchange"),
             RuntimeStage("join", [
@@ -311,7 +316,7 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
             RuntimeStage("broadcast_dim", [
                 _inv(app, "broadcast_dim", j, "broadcast_write", node,
                      {"src": "scan_dim", "dst": "dim_bcast", "partition": j},
-                     priority)
+                     priority, batchable=True)
                 for j, node in dim_layout], deps=("scan_dim",),
                 decision="exchange"),
             RuntimeStage("join", [
@@ -330,7 +335,7 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
         RuntimeStage("partial_agg", [
             _inv(app, "partial_agg", k, "partial_aggregate", agg_nodes[k],
                  {"src": "joined", "dst": "partials", "partition": k,
-                  "num_groups": num_groups}, priority)
+                  "num_groups": num_groups}, priority, batchable=True)
             for k in range(n_join)], deps=("join",),
             ephemeral_inputs=("joined",), decision="aggregate"),
         RuntimeStage("final_agg", [

@@ -144,12 +144,29 @@ def plan_runtime_stages(app: str, fact_layout: Sequence[tuple[int, int]],
         consolidated=consolidated, num_groups=num_groups, priority=priority)
 
 
+def split_partitions(partitions, split: int) -> list:
+    """Split each home node's partition into ``split`` row-range slices —
+    the fine-grained ``[(node, table), ...]`` layout where a node hosts
+    several map partitions (so the invoker's batch coalescing has same-node
+    siblings to merge). Slices are ``TableSlice`` views: no copies until a
+    scan reads them. The per-node byte totals — everything the decision
+    nodes consume — are unchanged."""
+    out = []
+    for node, t in sorted(partitions.items()):
+        k = max(1, min(int(split), t.num_rows or 1))
+        bounds = np.linspace(0, t.num_rows, k + 1).astype(int)
+        out.extend((node, t.slice(lo, hi))
+                   for lo, hi in zip(bounds[:-1], bounds[1:]))
+    return out
+
+
 def prepare_query_plan(runtime, fact: DistTable, dim: DistTable,
                        strategy: QueryStrategy, app: str = "query",
                        priority: int = 10, num_groups: int = 64,
                        pc: PrivateController | None = None,
                        consolidate_threshold: int | None = None,
                        workflow: DecisionWorkflow | None = None,
+                       map_split: int = 1,
                        ) -> tuple[AdaptiveQueryPlan, PrivateController]:
     """Planner entry point for a *named* application on a shared runtime.
 
@@ -159,6 +176,11 @@ def prepare_query_plan(runtime, fact: DistTable, dim: DistTable,
     controller) ready for ``runtime.execute``. Several apps prepared against
     one runtime can then be driven concurrently — this is what
     ``repro.runtime.scheduler.QueryScheduler`` admits per query.
+
+    ``map_split`` seeds each node's input as that many sub-partitions
+    (``split_partitions``): map stages then run ``map_split`` invocations
+    per node, which the invoker's batching coalesces back into one claim
+    per node — the vectorized-data-plane benchmark knob.
     """
     if pc is None:
         pc = PrivateController(app, runtime.gc, priority=priority)
@@ -172,8 +194,12 @@ def prepare_query_plan(runtime, fact: DistTable, dim: DistTable,
         node_status=runtime.gc.node_status(), profile=dict(pc.profile))
     run = wf.start(ctx)
 
-    fact_layout = runtime.seed(app, "input/fact", fact.partitions)
-    dim_layout = runtime.seed(app, "input/dim", dim.partitions)
+    fact_parts = fact.partitions if map_split <= 1 \
+        else split_partitions(fact.partitions, map_split)
+    dim_parts = dim.partitions if map_split <= 1 \
+        else split_partitions(dim.partitions, map_split)
+    fact_layout = runtime.seed(app, "input/fact", fact_parts)
+    dim_layout = runtime.seed(app, "input/dim", dim_parts)
     plan = AdaptiveQueryPlan(run, app, fact_layout, dim_layout,
                              num_groups=num_groups, priority=pc.priority)
     return plan, pc
@@ -188,7 +214,8 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
                           consolidate_threshold: int | None = None,
                           workflow: DecisionWorkflow | None = None,
                           barrier: bool = False, recovery="lineage",
-                          max_recoveries: int = 8):
+                          max_recoveries: int = 8, batching: bool = True,
+                          map_split: int = 1):
     """Run the TPC-DS-like sub-query end-to-end on the serverless runtime.
 
     One decision workflow drives the whole query: the scan decision binds
@@ -200,6 +227,9 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
     (e.g. with the simulator) and ``barrier=True`` to force the legacy
     stage-at-a-time executor. ``recovery``/``max_recoveries`` pick the
     failure-handling policy for lost shuffle stages (see ``DAGExecutor``).
+    ``batching`` (only consulted when the runtime is built here) toggles
+    the invoker's coalescing of batchable map invocations — the control
+    plane sees identical decisions and metrics either way (tested).
     Returns ``(group_sums, runtime)``.
     """
     from repro.runtime.executor import Runtime
@@ -208,11 +238,12 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
         if gc is None:
             nodes = sorted(set(fact.partitions) | set(dim.partitions))
             gc = GlobalController({n: 8 for n in nodes})
-        runtime = Runtime(gc, invoker=invoker)
+        runtime = Runtime(gc, invoker=invoker, batching=batching)
     plan, pc = prepare_query_plan(
         runtime, fact, dim, strategy, app=app, priority=priority,
         num_groups=num_groups, pc=pc,
-        consolidate_threshold=consolidate_threshold, workflow=workflow)
+        consolidate_threshold=consolidate_threshold, workflow=workflow,
+        map_split=map_split)
     runtime.execute(plan.initial_stages(), pc=pc, planner=plan,
                     barrier=barrier, recovery=recovery,
                     max_recoveries=max_recoveries)

@@ -1,10 +1,27 @@
-"""Jit'd dispatch wrappers: Pallas kernel on TPU, interpret-mode kernel or
-jnp reference elsewhere. These are the functions the model/data plane calls.
+"""The data plane's single kernel-dispatch point.
+
+Every primitive the analytics operators and the serverless function library
+touch routes through here: attention for the model plane, and the
+partition / join / aggregate primitives for the analytics plane. Each entry
+dispatches to the fastest available implementation — a Pallas kernel on TPU
+(``partition_histogram``/``partition_scatter``), a jitted single-pass jnp
+computation elsewhere — so callers never carry their own ad-hoc ``jax.jit``
+wrappers and every call site shares one compilation cache.
+
+Shape classes: the partition-grouping entry point (``grouping_indices``)
+pads its input to the next power of two before hitting the jitted body, so
+32 map partitions with 32 different post-filter row counts compile a
+handful of executables (one per power-of-two class), not 32 — the
+no-per-partition-recompilation property the CI smoke benchmark asserts.
 """
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
@@ -14,9 +31,15 @@ from repro.kernels.partition import (
     partition_scatter as _scatter,
 )
 
+HASH_MULT = jnp.uint32(0x9E3779B1)   # Knuth multiplicative hash
+EMPTY = jnp.int32(-1)
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# -- attention -----------------------------------------------------------------
 
 
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
@@ -36,17 +59,224 @@ def decode_attention(q, k_cache, v_cache, length, block_k: int = 512,
     return ref.decode_attention_ref(q, k_cache, v_cache, length)
 
 
+# -- partitioning (the shuffle primitive) --------------------------------------
+
+
+def _hash(keys: jax.Array, bits: int) -> jax.Array:
+    h = keys.astype(jnp.uint32) * HASH_MULT
+    return (h >> (32 - bits)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("num_partitions",))
+def partition_ids(keys: jax.Array, num_partitions: int) -> jax.Array:
+    """Radix/hash partition id per row."""
+    bits = max(1, int(np.ceil(np.log2(num_partitions))))
+    return _hash(keys, bits) % num_partitions
+
+
+@partial(jax.jit, static_argnames=("num_partitions",))
+def partition_permutation(keys: jax.Array, num_partitions: int):
+    """Stable permutation grouping rows by partition + per-partition counts.
+
+    The jitted single-pass fallback the dispatch layer uses off-TPU; the
+    Pallas histogram/scatter pair computes the same grouping on TPU.
+    """
+    pids = partition_ids(keys, num_partitions)
+    order = jnp.argsort(pids, stable=True)
+    counts = jnp.bincount(pids, length=num_partitions)
+    return order, counts, pids
+
+
 def partition_histogram(part_ids, num_partitions: int, block: int = 1024,
                         force_kernel: bool = False):
-    if on_tpu() or force_kernel:
-        return _hist(part_ids, num_partitions, block=block,
+    """Per-partition row counts. Pallas per-block histograms on TPU (summed
+    here), jnp bincount elsewhere. Handles the n == 0 and
+    block-non-divisible edges the raw kernel asserts on."""
+    n = int(part_ids.shape[0])
+    if n == 0:
+        return jnp.zeros((num_partitions,), jnp.int32)
+    if (on_tpu() or force_kernel) and n % min(block, n) == 0:
+        hist = _hist(part_ids, num_partitions, block=block,
                      interpret=not on_tpu())
+        return jnp.sum(hist, axis=0).astype(jnp.int32)
     return ref.partition_histogram_ref(part_ids, num_partitions)
 
 
 def partition_scatter(rows, part_ids, num_partitions: int, block: int = 1024,
                       force_kernel: bool = False):
-    if on_tpu() or force_kernel:
+    """Stable grouping of 2-D rows by partition id -> (grouped, offsets).
+
+    Pallas kernel on TPU when the row count divides the block size; the
+    jnp reference otherwise (including the empty input the kernel's grid
+    cannot express)."""
+    n = int(rows.shape[0])
+    if n == 0:
+        return rows, jnp.zeros((num_partitions,), jnp.int32)
+    if (on_tpu() or force_kernel) and n % min(block, n) == 0:
         return _scatter(rows, part_ids, num_partitions, block=block,
                         interpret=not on_tpu())
     return ref.partition_scatter_ref(rows, part_ids, num_partitions)
+
+
+def _pad_len(n: int) -> int:
+    """Next power of two >= n (floor 8): the shape-class quantizer that
+    keeps per-partition row-count jitter from recompiling the jitted
+    grouping body."""
+    return max(8, 1 << int(np.ceil(np.log2(max(1, n)))))
+
+
+@partial(jax.jit, static_argnames=("num_partitions",))
+def _grouping_padded(pids_padded: jax.Array, num_partitions: int):
+    """Grouping permutation over a padded id vector.
+
+    Padding rows carry the sentinel id ``num_partitions`` — larger than any
+    real id, so the stable sort parks them at the end and the first
+    ``offsets[-1]`` entries of ``order`` are exactly the real rows'
+    grouping permutation. ``offsets`` has ``num_partitions + 1`` entries
+    (exclusive prefix; the last is the total real-row count).
+    """
+    order = jnp.argsort(pids_padded, stable=True)
+    counts = jnp.bincount(pids_padded, length=num_partitions + 1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(counts[:num_partitions]).astype(jnp.int32)])
+    return order, offsets
+
+
+def grouping_indices(part_ids, num_partitions: int,
+                     force_kernel: bool = False):
+    """One-call shuffle grouping: ``(order, offsets)`` for a partition-id
+    vector, where ``order[offsets[p]:offsets[p+1]]`` are partition ``p``'s
+    row indices in stable (original) order.
+
+    This is the single-pass replacement for the per-bucket
+    ``np.nonzero``/``take`` loop: one device computation yields every
+    bucket's membership at once. Inputs are padded to a power-of-two shape
+    class before the jitted body (or the Pallas scatter on TPU) runs, so
+    heterogeneous per-partition row counts share a handful of compiled
+    executables.
+    """
+    n = int(part_ids.shape[0])
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32),
+                jnp.zeros((num_partitions + 1,), jnp.int32))
+    n_pad = _pad_len(n)
+    pids = jnp.asarray(part_ids, jnp.int32)
+    if n_pad != n:
+        pids = jnp.concatenate(
+            [pids, jnp.full((n_pad - n,), num_partitions, jnp.int32)])
+    if on_tpu() or force_kernel:
+        # Pallas path: scatter the index column through the kernel — the
+        # grouped output *is* the permutation (sentinel rows land last),
+        # and the kernel's per-partition bases over num_partitions + 1
+        # buckets *are* the offsets vector ([0, c0, c0+c1, ..., n]).
+        idx = jnp.arange(n_pad, dtype=jnp.int32)[:, None]
+        grouped, part_base = _scatter(idx, pids, num_partitions + 1,
+                                      interpret=not on_tpu())
+        return grouped[:, 0][:n], part_base
+    order, offsets = _grouping_padded(pids, num_partitions)
+    return order[:n], offsets
+
+
+def grouping_cache_size() -> int:
+    """Compiled-executable count of the jitted grouping body — the CI
+    smoke benchmark asserts this stays at one per (shape class, bucket
+    count), i.e. no per-partition recompilation."""
+    try:
+        return int(_grouping_padded._cache_size())
+    except AttributeError:  # pragma: no cover - older/newer jax internals
+        return -1
+
+
+# -- joins ---------------------------------------------------------------------
+
+
+@jax.jit
+def sort_merge_join_indices(probe_keys: jax.Array, build_keys: jax.Array):
+    """Sort-merge: sort build side, binary-merge probe side.
+
+    Returns (idx_into_build, found) aligned with probe rows.
+    """
+    build_order = jnp.argsort(build_keys)
+    sorted_build = build_keys[build_order]
+    pos = jnp.searchsorted(sorted_build, probe_keys)
+    pos = jnp.clip(pos, 0, build_keys.shape[0] - 1)
+    found = sorted_build[pos] == probe_keys
+    idx = jnp.where(found, build_order[pos], 0)
+    return idx, found
+
+
+def _hash_table_size(n: int) -> int:
+    # load factor <= 0.25: linear-probing cluster lengths stay far below
+    # the probe budget even for multi-million-row build sides
+    return max(16, int(2 ** np.ceil(np.log2(4 * n))))
+
+
+@partial(jax.jit, static_argnames=("max_probes",))
+def build_hash_table(build_keys: jax.Array, max_probes: int = 16):
+    """Open-addressing (linear probing) insert of unique build keys.
+
+    Parallel insertion: each round, every unplaced key writes its row index
+    to its current probe slot; scatter conflicts resolve last-writer-wins,
+    losers advance to the next probe position. With load factor <= 0.5 this
+    converges in a handful of rounds.
+    """
+    n = build_keys.shape[0]
+    cap = _hash_table_size(n)
+    bits = int(np.log2(cap))
+    slots = jnp.full((cap,), EMPTY)            # stored row index, -1 = empty
+    h0 = _hash(build_keys, bits)
+    rows = jnp.arange(n, dtype=jnp.int32)
+
+    def round_(p, carry):
+        slots, placed = carry
+        pos = (h0 + p) % cap
+        # only unplaced keys contending for currently-empty slots
+        want = jnp.logical_and(jnp.logical_not(placed), slots[pos] == EMPTY)
+        cand = jnp.where(want, rows, EMPTY)
+        tgt = jnp.where(want, pos, cap)        # park non-contenders off-table
+        slots_ext = jnp.concatenate([slots, jnp.full((1,), EMPTY)])
+        slots_ext = slots_ext.at[tgt].max(cand)   # max = deterministic winner
+        slots = slots_ext[:cap]
+        placed = jnp.logical_or(placed, slots[pos] == rows)
+        return slots, placed
+
+    slots, _ = jax.lax.fori_loop(0, max_probes, round_,
+                                 (slots, jnp.zeros((n,), bool)))
+    return slots
+
+
+@partial(jax.jit, static_argnames=("max_probes",))
+def hash_join_indices(probe_keys: jax.Array, build_keys: jax.Array,
+                      slots: jax.Array, max_probes: int = 16):
+    """Probe the hash table. Returns (idx_into_build, found) per probe row."""
+    cap = slots.shape[0]
+    bits = int(np.log2(cap))
+    h = _hash(probe_keys, bits)
+
+    def probe(p, carry):
+        idx, found = carry
+        pos = (h + p) % cap
+        cand = slots[pos]
+        hit = jnp.logical_and(
+            cand != EMPTY,
+            jnp.logical_and(build_keys[jnp.maximum(cand, 0)] == probe_keys,
+                            jnp.logical_not(found)))
+        idx = jnp.where(hit, cand, idx)
+        return idx, jnp.logical_or(found, hit)
+
+    idx0 = jnp.zeros_like(probe_keys)
+    found0 = jnp.zeros(probe_keys.shape, bool)
+    idx, found = jax.lax.fori_loop(0, max_probes, probe, (idx0, found0))
+    return idx, found
+
+
+# -- aggregation ---------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("num_segments",))
+def segment_sum(values: jax.Array, segment_ids: jax.Array,
+                num_segments: int) -> jax.Array:
+    """Segment-sum values by id — the grouped-aggregation primitive."""
+    return jax.ops.segment_sum(values, segment_ids,
+                               num_segments=num_segments)

@@ -308,26 +308,30 @@ class Runtime:
                  invoker: Invoker | str = "inline",
                  store: ShuffleStore | None = None,
                  metrics: MetricsSink | None = None, max_workers: int = 8,
-                 net_bw: float | None = None, disaggregated: bool = False):
+                 net_bw: float | None = None, disaggregated: bool = False,
+                 batching: bool = True):
         self.gc = gc
         self.store = store or ShuffleStore(net_bw=net_bw,
                                            disaggregated=disaggregated)
         self.metrics = metrics or MetricsSink()
         if isinstance(invoker, str):
             if invoker == "inline":
-                invoker = InlineInvoker(gc, self.store, self.metrics)
+                invoker = InlineInvoker(gc, self.store, self.metrics,
+                                        batching=batching)
             elif invoker == "threads":
                 invoker = ThreadPoolInvoker(gc, self.store, self.metrics,
-                                            max_workers=max_workers)
+                                            max_workers=max_workers,
+                                            batching=batching)
             else:
                 raise ValueError(f"unknown invoker backend {invoker!r}")
         self.invoker = invoker
         self.lineage = LineageLog()
         self.recoveries: list[RecoveryEvent] = []
 
-    def seed(self, app: str, stage: str,
-             partitions: Mapping[int, object]) -> list[tuple[int, int]]:
-        """Load base data (node -> table) into the store; returns the
+    def seed(self, app: str, stage: str, partitions,
+             ) -> list[tuple[int, int]]:
+        """Load base data (``{node: table}`` or ``[(node, table), ...]`` for
+        several partitions per node) into the store; returns the
         ``[(partition, home_node), ...]`` layout the planner places against.
         """
         return self.store.ingest(app, stage, partitions)

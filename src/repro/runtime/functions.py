@@ -1,12 +1,22 @@
 """The partitioned analytics function library.
 
 Each entry is a stateless serverless function: it reads its inputs from the
-shuffle store, computes with ``repro.analytics.operators`` on the JAX data
-plane, and writes its outputs back — no state survives the invocation, so
-the invoker may retry it after preemption. Registered names are what the
-executor puts into ``Invocation.func``; the decision tuple's ``func`` field
-("hash_join" / "merge_join") selects between the two join variants exactly
-as in the paper's Fig. 6.
+shuffle store, computes with ``repro.analytics.operators`` (which routes
+through the kernel dispatch layer ``repro.kernels.ops``) and writes its
+outputs back — no state survives the invocation, so the invoker may retry
+it after preemption. Registered names are what the executor puts into
+``Invocation.func``; the decision tuple's ``func`` field ("hash_join" /
+"merge_join") selects between the two join variants exactly as in the
+paper's Fig. 6.
+
+Hot functions are **single-pass and loop-free**: ``shuffle_write`` computes
+one grouping permutation on the device and publishes every bucket as a
+``TableSlice`` view over the permuted buffer through ``ctx.put_many`` (one
+store round trip for all buckets); multi-partition reads concatenate with
+one multi-way ``Table.concat_all`` per column; the final aggregate folds
+all partials in one vectorized reduction. ``shuffle_write_loop`` keeps the
+legacy per-bucket ``nonzero``/``take``/``put`` loop as the benchmark
+baseline (``benchmarks/bench_dataplane.py``).
 
 Stage-name and partition parameters arrive via ``ctx.params``:
 
@@ -64,12 +74,39 @@ def scan_filter(ctx) -> None:
 
 @register("shuffle_write")
 def shuffle_write(ctx) -> None:
-    """Hash-partition one input partition into the join's bucket space.
+    """Hash-partition one input partition into the join's bucket space —
+    the single-pass columnar path.
 
-    Writes bucket ``r`` of stage ``dst`` for every non-empty bucket; the
-    store appends this writer's slice to whatever other map instances wrote
-    for the same bucket — that append *is* the all-to-all shuffle.
+    One kernel dispatch (``ops.grouping_indices``: Pallas histogram +
+    scatter on TPU, jitted stable sort elsewhere, padded to a power-of-two
+    shape class so heterogeneous partitions share compilations) yields the
+    grouping permutation and every bucket's offset range; one gather per
+    column permutes the partition; each non-empty bucket is then a
+    zero-copy ``TableSlice`` of the permuted buffer, published together
+    via ``ctx.put_many``. The store appends this writer's slices to
+    whatever other map instances wrote for the same buckets — that append
+    *is* the all-to-all shuffle.
     """
+    p = ctx.params
+    t = ctx.get(p["src"], p["partition"])
+    if t is None or t.num_rows == 0:
+        return
+    nb = int(p["num_buckets"])
+    pids = ops.partition_ids(t["key"], nb)
+    order, offsets = ops.grouping_indices(pids, nb)
+    permuted = t.take(order)
+    bounds = np.asarray(offsets)
+    out = {r: permuted.slice(bounds[r], bounds[r + 1])
+           for r in range(nb) if bounds[r + 1] > bounds[r]}
+    ctx.put_many(p["dst"], out)
+
+
+@register("shuffle_write_loop")
+def shuffle_write_loop(ctx) -> None:
+    """Legacy per-bucket shuffle: one host round trip (``np.nonzero``), one
+    gather and one store ``put`` *per bucket*. Kept as the benchmark
+    baseline the batched columnar path is measured against; not planned by
+    default."""
     p = ctx.params
     t = ctx.get(p["src"], p["partition"])
     if t is None or t.num_rows == 0:
@@ -97,15 +134,13 @@ def broadcast_write(ctx) -> None:
 
 
 def _read_side(ctx, stage: str, parts):
+    """Concatenate a join side's partitions in ONE multi-way concat per
+    column (``Table.concat_all``) instead of the O(P²) pairwise chain."""
     if parts == "all":
         return ctx.get_all(stage)
-    out = None
-    for part in parts:
-        t = ctx.get(stage, part)
-        if t is None or t.num_rows == 0:
-            continue
-        out = t if out is None else out.concat(t)
-    return out
+    got = [t for t in (ctx.get(stage, part) for part in parts)
+           if t is not None and t.num_rows]
+    return Table.concat_all(got) if got else None
 
 
 def _join_partition(ctx, method: str) -> None:
@@ -137,6 +172,7 @@ def merge_join_partition(ctx) -> None:
 
 @register("partial_aggregate")
 def partial_aggregate(ctx) -> None:
+    """Per-partition grouped partial sums — one segment-sum dispatch."""
     p = ctx.params
     g = int(p["num_groups"])
     t = ctx.get(p["src"], p["partition"])
@@ -149,10 +185,13 @@ def partial_aggregate(ctx) -> None:
 
 @register("final_aggregate")
 def final_aggregate(ctx) -> None:
+    """Fold every partial vector in one pass (float64 accumulation for a
+    deterministic, order-independent total)."""
     p = ctx.params
-    total = np.zeros(int(p["num_groups"]), dtype=np.float64)
-    for part in ctx.partitions(p["src"]):
-        t = ctx.get(p["src"], part)
-        if t is not None and t.num_rows:
-            total += np.asarray(t["sum"], dtype=np.float64)
+    g = int(p["num_groups"])
+    vecs = [t["sum"] for t in (ctx.get(p["src"], part)
+                               for part in ctx.partitions(p["src"]))
+            if t is not None and t.num_rows]
+    total = (np.stack([np.asarray(v, dtype=np.float64) for v in vecs])
+             .sum(axis=0) if vecs else np.zeros(g, dtype=np.float64))
     ctx.put(p["dst"], 0, Table({"sum": jnp.asarray(total, jnp.float32)}))

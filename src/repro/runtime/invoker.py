@@ -10,10 +10,24 @@ result is discarded and the invocation retried — safe precisely because
 functions are stateless and every write lands in the store under the
 invocation's own writer label (retry overwrites, never duplicates).
 
+Batched map invocations: invocations carrying ``batchable=True`` (the
+planner sets it on map-shaped stages — scans, shuffle writes, broadcast
+writes, partial aggregates) that share a (stage, function, node) are
+**coalesced** into one batched call: one slot claim serves the whole group,
+whose members run back-to-back with their own ``FnContext``, metrics record
+and fault-injection hooks — so a 32-partition scan is a handful of claims
+and jitted calls, not 32 interpreter round trips, while the control plane
+(decision sequences, per-stage record counts, lineage, fault match counts)
+sees exactly what unbatched execution would produce. A batch that crashes
+or loses its claim demotes the unfinished members to individual execution
+with the full per-invocation retry machinery. ``batching=False`` disables
+coalescing entirely (the differential baseline).
+
 Two backends:
 
 * ``InlineInvoker``     — sequential, deterministic (tests, oracles).
-* ``ThreadPoolInvoker`` — real parallelism across function slots.
+* ``ThreadPoolInvoker`` — real parallelism across function slots (batches
+  from one stage run concurrently, one worker per group).
 """
 
 from __future__ import annotations
@@ -35,7 +49,8 @@ class SlotGate:
     A scheduler policy (e.g. weighted fair share, ``repro.runtime.scheduler``)
     installs a gate on the shared invoker; ``acquire`` blocks until the
     invocation's application may take one more function slot, ``release``
-    returns the token. The default gate admits everything.
+    returns the token. The default gate admits everything. A batched call
+    holds exactly one token — it occupies one function slot.
     """
 
     def acquire(self, inv: "Invocation") -> None:  # pragma: no cover
@@ -47,7 +62,13 @@ class SlotGate:
 
 @dataclass(frozen=True)
 class Invocation:
-    """One stateless function instance of a stage."""
+    """One stateless function instance of a stage.
+
+    ``batchable`` marks map-shaped invocations (per-partition, no cross-
+    partition reads) the invoker may coalesce with same-stage same-function
+    same-node siblings into one slot claim; correctness never depends on it
+    — it is purely a dispatch-overhead knob.
+    """
 
     name: str                      # e.g. "query/join/3"
     app: str
@@ -57,13 +78,18 @@ class Invocation:
     node: int
     priority: int = 0
     params: Mapping[str, Any] = field(default_factory=dict)
+    batchable: bool = False
 
 
 class FnContext:
     """What a function instance sees: namespaced store access + its params.
 
     All store traffic flows through here so the invoker can attribute
-    bytes-in/out (and per-source read volumes) to the invocation.
+    bytes-in/out (and per-source read volumes) to the invocation —
+    and so the time an invocation spends against the store
+    (``store_seconds``) is split from its on-device compute in the
+    invocation record (the compute-vs-transfer breakdown decision nodes
+    read out of ``profile_feedback``).
     """
 
     def __init__(self, store: ShuffleStore, inv: Invocation):
@@ -75,6 +101,7 @@ class FnContext:
         self.writer = inv.name
         self.bytes_in = 0
         self.bytes_out = 0
+        self.store_seconds = 0.0
         self.reads_by_node: dict[int, int] = {}
         self.writes: list[tuple[str, int]] = []   # lineage: (stage, part)
 
@@ -82,34 +109,66 @@ class FnContext:
         for src, b in self._store.read_sources(
                 self.app, stage, partition, self.node).items():
             self.reads_by_node[src] = self.reads_by_node.get(src, 0) + b
-        t = self._store.get(self.app, stage, partition, self.node)
+        t0 = time.perf_counter()
+        try:
+            t = self._store.get(self.app, stage, partition, self.node)
+        finally:
+            self.store_seconds += time.perf_counter() - t0
         if t is not None:
             self.bytes_in += int(t.nbytes)
         return t
 
     def get_all(self, stage: str):
-        out = None
-        for p in self.partitions(stage):
-            t = self.get(stage, p)
-            if t is None or t.num_rows == 0:
-                continue
-            out = t if out is None else out.concat(t)
-        return out
+        from repro.analytics.table import Table
+        got = [t for t in (self.get(stage, p)
+                           for p in self.partitions(stage))
+               if t is not None and t.num_rows]
+        return Table.concat_all(got) if got else None
 
-    def put(self, stage: str, partition: int, table) -> None:
-        # Externalizing state means materializing it: block on the columns so
-        # each invocation pays for its own compute before the blob is
-        # published (otherwise jax's async dispatch defers whole-query work
-        # into whichever downstream reader first forces a value, scrambling
-        # per-stage metrics and stage overlap alike).
+    @staticmethod
+    def _force(table) -> None:
+        # Externalizing state means materializing it: block on the columns
+        # (for a TableSlice, its shared *parent* buffer — no copy) so each
+        # invocation pays for its own compute before the blob is published
+        # (otherwise jax's async dispatch defers whole-query work into
+        # whichever downstream reader first forces a value, scrambling
+        # per-stage metrics and stage overlap alike). This wait is charged
+        # to compute, not store time — it is the invocation's own pending
+        # device work draining.
         try:
             import jax
-            jax.block_until_ready(getattr(table, "columns", None))
+            cols = getattr(table, "parent_columns", None)
+            if cols is None:
+                cols = getattr(table, "columns", None)
+            jax.block_until_ready(cols)
         except ImportError:  # pragma: no cover - jax is a hard dep elsewhere
             pass
-        self.bytes_out += self._store.put(
-            self.app, stage, partition, table, self.node, writer=self.writer)
+
+    def put(self, stage: str, partition: int, table) -> None:
+        self._force(table)
+        t0 = time.perf_counter()
+        try:
+            self.bytes_out += self._store.put(
+                self.app, stage, partition, table, self.node,
+                writer=self.writer)
+        finally:
+            self.store_seconds += time.perf_counter() - t0
         self.writes.append((stage, partition))
+
+    def put_many(self, stage: str, tables: Mapping[int, Any]) -> None:
+        """Publish many partitions in one store round trip (the columnar
+        shuffle path: every bucket a slice of one parent buffer)."""
+        if not tables:
+            return
+        for table in tables.values():
+            self._force(table)
+        t0 = time.perf_counter()
+        try:
+            self.bytes_out += self._store.put_many(
+                self.app, stage, tables, self.node, writer=self.writer)
+        finally:
+            self.store_seconds += time.perf_counter() - t0
+        self.writes.extend((stage, int(p)) for p in sorted(tables))
 
     def partitions(self, stage: str) -> list[int]:
         return self._store.partitions(self.app, stage)
@@ -136,6 +195,11 @@ class Invoker:
     ``max_attempts`` bounds only genuinely stuck claims. ``gate`` is an
     optional ``SlotGate`` a scheduler installs to ration slots across
     applications; the gate token is held exactly while the claim is.
+
+    ``batching`` enables coalescing of ``batchable`` invocations into
+    per-(stage, function, node) groups of at most ``max_batch`` members;
+    every member keeps its own metrics record and injector hook calls, so
+    batching is invisible to the control plane.
     """
 
     parallel = False
@@ -145,7 +209,8 @@ class Invoker:
                  metrics: MetricsSink | None = None, max_attempts: int = 5,
                  starve_wait: float = 0.0,
                  intercept: Callable[[Invocation, int], None] | None = None,
-                 gate: SlotGate | None = None, injector=None):
+                 gate: SlotGate | None = None, injector=None,
+                 batching: bool = True, max_batch: int = 16):
         self.gc = gc
         self.store = store
         self.metrics = metrics or MetricsSink()
@@ -154,6 +219,8 @@ class Invoker:
         self.intercept = intercept
         self.gate = gate
         self.injector = injector
+        self.batching = batching
+        self.max_batch = max_batch
         self.registry: Mapping[str, Callable[[FnContext], Any]] | None = None
 
     def _resolve(self, name: str) -> Callable[[FnContext], Any]:
@@ -165,10 +232,48 @@ class Invoker:
         except KeyError:
             raise InvocationError(f"unregistered function {name!r}") from None
 
-    def _execute_one(self, inv: Invocation, deps: tuple[str, ...]) -> None:
+    # -- grouping -------------------------------------------------------------
+
+    def _groups(self, invocations: Sequence[Invocation],
+                ) -> list[list[Invocation]]:
+        """Coalesce batchable invocations sharing (stage, func, node, app,
+        priority) into groups of at most ``max_batch``, preserving
+        first-appearance order; everything else stays a singleton."""
+        groups: list[list[Invocation]] = []
+        open_group: dict[tuple, int] = {}
+        for inv in invocations:
+            if not (self.batching and inv.batchable):
+                groups.append([inv])
+                continue
+            key = (inv.stage, inv.func, inv.node, inv.app, inv.priority)
+            at = open_group.get(key)
+            if at is not None and len(groups[at]) < self.max_batch:
+                groups[at].append(inv)
+            else:
+                open_group[key] = len(groups)
+                groups.append([inv])
+        return groups
+
+    def _execute_group(self, group: list[Invocation],
+                       deps: tuple[str, ...]) -> None:
+        if len(group) == 1:
+            self._execute_one(group[0], deps)
+        else:
+            self._execute_batch(group, deps)
+
+    # -- single-invocation path -----------------------------------------------
+
+    def _execute_one(self, inv: Invocation, deps: tuple[str, ...],
+                     first_attempt: int = 0) -> None:
+        """Claim → run → release for one invocation. ``first_attempt``
+        offsets the attempt numbering for members demoted out of a crashed
+        or preempted batch, so retry attempts (and the fault plan's
+        ``attempt`` matching) continue where the batch left off — against
+        the same total ``max_attempts`` budget, so an invocation that
+        crashes on every attempt exhausts identically batched or not."""
         fn = self._resolve(inv.func)
         wait = self.starve_wait if self.starve_wait > 0 else self.RELEASE_WAIT
-        for attempt in range(self.max_attempts):
+        for attempt in range(first_attempt, self.max_attempts):
             if self.gate is not None:
                 self.gate.acquire(inv)
             claim = None
@@ -241,18 +346,143 @@ class Invoker:
                 inv.name, inv.app, inv.stage, inv.func, inv.node, attempt,
                 "ok" if committed else "preempted", t0, t1,
                 bytes_in=ctx.bytes_in, bytes_out=ctx.bytes_out,
+                store_seconds=ctx.store_seconds,
                 reads_by_node=dict(ctx.reads_by_node), deps=deps,
                 priority=inv.priority, writes=tuple(ctx.writes)))
             if committed:
                 return
         self.metrics.record(InvocationRecord(
             inv.name, inv.app, inv.stage, inv.func, inv.node,
-            self.max_attempts, "starved", time.perf_counter(),
-            time.perf_counter(), deps=deps, priority=inv.priority))
+            self.max_attempts, "starved",
+            time.perf_counter(), time.perf_counter(), deps=deps,
+            priority=inv.priority))
         raise InvocationError(
             f"{inv.name}: no slot committed after {self.max_attempts} "
             f"attempts (preempted/starved by higher-priority claims, or "
             f"repeatedly crashed)")
+
+    # -- batched path ---------------------------------------------------------
+
+    def _record_member(self, inv: Invocation, attempt: int, status: str,
+                       t0: float, t1: float, deps: tuple[str, ...],
+                       ctx: FnContext | None = None) -> None:
+        self.metrics.record(InvocationRecord(
+            inv.name, inv.app, inv.stage, inv.func, inv.node, attempt,
+            status, t0, t1,
+            bytes_in=ctx.bytes_in if ctx else 0,
+            bytes_out=ctx.bytes_out if ctx else 0,
+            store_seconds=ctx.store_seconds if ctx else 0.0,
+            reads_by_node=dict(ctx.reads_by_node) if ctx else {},
+            deps=deps, priority=inv.priority,
+            writes=tuple(ctx.writes) if ctx else ()))
+
+    def _execute_batch(self, invs: list[Invocation],
+                       deps: tuple[str, ...]) -> None:
+        """One slot claim serves the whole group; members run back-to-back
+        under it, each with its own ``FnContext``, intercept/injector hook
+        calls and metrics record (timed per member) — so match counts,
+        lineage writes and per-partition metrics are exactly what
+        invocation-at-a-time execution would produce.
+
+        Failure demotion: a member crash releases the claim, records the
+        crash, and re-executes the crashed member (next attempt number) and
+        the never-started members (same attempt number) *individually* —
+        the full per-invocation retry machinery. A claim preempted
+        mid-batch discards and individually retries every member. Any
+        other exception (a lost shuffle stage, the function raising)
+        records completed members, releases the slot and propagates, which
+        is what the executor's recovery loop expects.
+        """
+        first = invs[0]
+        # resolve before any claim: an unregistered function must raise
+        # while no slot is held (all members share func by the grouping key)
+        fn = self._resolve(first.func)
+        wait = self.starve_wait if self.starve_wait > 0 else self.RELEASE_WAIT
+        for attempt in range(self.max_attempts):
+            if self.gate is not None:
+                self.gate.acquire(first)
+            claim = None
+            try:
+                epoch = self.gc.release_epoch(first.node)
+                claim = self.gc.try_commit(first.app, first.priority,
+                                           [first.node],
+                                           tag=f"{first.stage}*{len(invs)}")
+            finally:
+                if claim is None and self.gate is not None:
+                    self.gate.release(first)
+            if claim is None:
+                self.gc.wait_for_release(epoch, timeout=wait,
+                                         node=first.node)
+                continue
+            done: list[tuple[Invocation, FnContext, float, float]] = []
+            crashed_at: int | None = None
+            claim_alive = True
+            try:
+                for k, inv in enumerate(invs):
+                    t0 = time.perf_counter()
+                    try:
+                        if self.intercept is not None:
+                            self.intercept(inv, attempt)
+                        if self.injector is not None:
+                            self.injector.before_body(inv, attempt)
+                        ctx = FnContext(self.store, inv)
+                        fn(ctx)
+                        if self.injector is not None:
+                            self.injector.after_body(inv, attempt)
+                    except InjectedCrashError:
+                        crashed_at = k
+                        claim_alive = self.gc.finish(claim)
+                        self._record_member(inv, attempt, "crashed", t0,
+                                            time.perf_counter(), deps)
+                        break
+                    except BaseException:
+                        claim_alive = self.gc.finish(claim)
+                        for v, vctx, v0, v1 in done:
+                            self._record_member(
+                                v, attempt,
+                                "ok" if claim_alive else "preempted",
+                                v0, v1, deps, vctx)
+                        self._record_member(inv, attempt, "error", t0,
+                                            time.perf_counter(), deps)
+                        raise
+                    done.append((inv, ctx, t0, time.perf_counter()))
+                if crashed_at is None:
+                    claim_alive = self.gc.finish(claim)
+            finally:
+                if self.gate is not None:
+                    self.gate.release(first)
+            for v, vctx, v0, v1 in done:
+                self._record_member(v, attempt,
+                                    "ok" if claim_alive else "preempted",
+                                    v0, v1, deps, vctx)
+            if crashed_at is None and claim_alive:
+                return
+            # demote: crashed member + never-started members individually;
+            # a dead claim additionally discards-and-retries the completed
+            # members (their rewrites overwrite under the writer label)
+            retry: list[tuple[Invocation, int]] = []
+            if not claim_alive:
+                retry += [(v, attempt + 1) for v, _, _, _ in done]
+            if crashed_at is not None:
+                retry.append((invs[crashed_at], attempt + 1))
+                retry += [(iv, attempt) for iv in invs[crashed_at + 1:]]
+            for inv, first_attempt in retry:
+                self._execute_one(inv, deps, first_attempt=first_attempt)
+            return
+        # batch claim starved after the full max_attempts budget: surface
+        # it exactly as the per-invocation path would — a fresh individual
+        # retry round would double the budget (and the starvation-detection
+        # latency) relative to unbatched execution
+        now = time.perf_counter()
+        for inv in invs:
+            self.metrics.record(InvocationRecord(
+                inv.name, inv.app, inv.stage, inv.func, inv.node,
+                self.max_attempts, "starved", now, now, deps=deps,
+                priority=inv.priority))
+        raise InvocationError(
+            f"{first.name} (+{len(invs) - 1} batched siblings): no slot "
+            f"committed after {self.max_attempts} attempts "
+            f"(preempted/starved by higher-priority claims)")
 
     def run_stage(self, invocations: Sequence[Invocation],
                   deps: tuple[str, ...] = ()) -> None:
@@ -264,12 +494,12 @@ class InlineInvoker(Invoker):
 
     def run_stage(self, invocations: Sequence[Invocation],
                   deps: tuple[str, ...] = ()) -> None:
-        for inv in invocations:
-            self._execute_one(inv, deps)
+        for group in self._groups(invocations):
+            self._execute_group(group, deps)
 
 
 class ThreadPoolInvoker(Invoker):
-    """Real parallelism: one worker per in-flight function instance.
+    """Real parallelism: one worker per in-flight batch or function instance.
 
     With a ``speculation`` policy installed (``SpeculationPolicy``,
     ``repro.runtime.faults``) the invoker polls in-flight invocations and
@@ -279,6 +509,9 @@ class ThreadPoolInvoker(Invoker):
     loser's identical output overwrites harmlessly), and ``run_stage``
     returns without waiting for the losers. ``drain()`` joins any such
     still-running losers — call it before asserting slot-leak invariants.
+    Speculative stages run invocation-at-a-time (first-completion-wins
+    needs per-member claims), so speculation and batching never mix within
+    a stage.
     """
 
     parallel = True
@@ -288,10 +521,12 @@ class ThreadPoolInvoker(Invoker):
                  max_attempts: int = 200, starve_wait: float = 0.0,
                  intercept: Callable[[Invocation, int], None] | None = None,
                  gate: SlotGate | None = None, injector=None,
-                 speculation=None):
+                 speculation=None, batching: bool = True,
+                 max_batch: int = 16):
         super().__init__(gc, store, metrics, max_attempts=max_attempts,
                          starve_wait=starve_wait, intercept=intercept,
-                         gate=gate, injector=injector)
+                         gate=gate, injector=injector, batching=batching,
+                         max_batch=max_batch)
         self.max_workers = max_workers
         self.speculation = speculation
         self.speculations: list[tuple[str, int, int, float]] = []
@@ -304,10 +539,11 @@ class ThreadPoolInvoker(Invoker):
         if self.speculation is not None and len(invocations) > 1:
             self._run_stage_speculative(list(invocations), deps)
             return
+        groups = self._groups(invocations)
         with ThreadPoolExecutor(
-                max_workers=min(self.max_workers, len(invocations))) as pool:
-            futures = [pool.submit(self._execute_one, inv, deps)
-                       for inv in invocations]
+                max_workers=min(self.max_workers, len(groups))) as pool:
+            futures = [pool.submit(self._execute_group, group, deps)
+                       for group in groups]
             for f in futures:
                 f.result()    # propagate the first failure
 

@@ -28,6 +28,11 @@ class InvocationRecord:
     finished: float
     bytes_in: int = 0
     bytes_out: int = 0
+    # wall time the invocation spent against the shuffle store (reads +
+    # writes, including emulated transfer); ``seconds - store_seconds`` is
+    # its on-device compute — the split that lets decision nodes see *why*
+    # a stage is slow (data movement vs work)
+    store_seconds: float = 0.0
     reads_by_node: Mapping[int, int] = field(default_factory=dict)
     deps: tuple[str, ...] = ()
     priority: int = 0
@@ -40,6 +45,10 @@ class InvocationRecord:
     def seconds(self) -> float:
         return max(0.0, self.finished - self.started)
 
+    @property
+    def compute_seconds(self) -> float:
+        return max(0.0, self.seconds - self.store_seconds)
+
 
 @dataclass
 class StageMetrics:
@@ -48,6 +57,8 @@ class StageMetrics:
     preempted: int = 0
     crashed: int = 0
     seconds: float = 0.0
+    store_seconds: float = 0.0     # time against the store (transfer)
+    compute_seconds: float = 0.0   # seconds - store_seconds, per record
     bytes_in: int = 0
     bytes_out: int = 0
 
@@ -82,6 +93,8 @@ class MetricsSink:
             m.preempted += r.status == "preempted"
             m.crashed += r.status == "crashed"
             m.seconds += r.seconds
+            m.store_seconds += r.store_seconds
+            m.compute_seconds += r.compute_seconds
             m.bytes_in += r.bytes_in
             m.bytes_out += r.bytes_out
         return out
@@ -111,6 +124,8 @@ class MetricsSink:
             if stage is not None and name != stage:
                 continue
             out[f"{name}.seconds"] = m.seconds
+            out[f"{name}.store_seconds"] = m.store_seconds
+            out[f"{name}.compute_seconds"] = m.compute_seconds
             out[f"{name}.invocations"] = m.invocations
             out[f"{name}.bytes_in"] = m.bytes_in
             out[f"{name}.bytes_out"] = m.bytes_out
@@ -121,10 +136,11 @@ class MetricsSink:
     def format_table(self, app: str) -> str:
         """Per-stage invocation/bytes dashboard (printed by the examples)."""
         lines = [f"{'stage':16s} {'inv':>4s} {'pre':>4s} {'seconds':>9s} "
-                 f"{'bytes_in':>10s} {'bytes_out':>10s}"]
+                 f"{'store_s':>9s} {'bytes_in':>10s} {'bytes_out':>10s}"]
         for name, m in self.by_stage(app).items():
             lines.append(f"{name:16s} {m.invocations:4d} {m.preempted:4d} "
-                         f"{m.seconds:9.4f} {m.bytes_in:10d} {m.bytes_out:10d}")
+                         f"{m.seconds:9.4f} {m.store_seconds:9.4f} "
+                         f"{m.bytes_in:10d} {m.bytes_out:10d}")
         return "\n".join(lines)
 
     # -- trace replay into the simulator ---------------------------------------

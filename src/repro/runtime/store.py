@@ -186,6 +186,34 @@ class ShuffleStore:
 
     # -- writes ---------------------------------------------------------------
 
+    def _put_locked(self, app: str, stage: str, partition: int, table,
+                    node: int, writer: str, nbytes: int, rows: int) -> None:
+        """Admission + insert of one writer slice; caller holds the lock
+        (``_admit`` may block on the condition, releasing it while waiting).
+        """
+        self._admit(app, stage, partition, writer, nbytes)
+        lost = self._lost.get((app, stage))
+        if lost is not None:
+            # a producer (retry, speculation backup, lineage recompute)
+            # rewriting a lost partition heals it
+            lost.discard(partition)
+            if not lost:
+                del self._lost[(app, stage)]
+        parts = self._stages.setdefault((app, stage), {})
+        blobs = parts.setdefault(partition, {})
+        old = blobs.get(writer)
+        if old is not None:   # preempted attempt being re-done: retract it
+            self.resident_bytes[old.node] = \
+                self.resident_bytes.get(old.node, 0) - old.nbytes
+            self.app_bytes[app] = \
+                self.app_bytes.get(app, 0) - old.nbytes
+        blobs[writer] = Blob(table, node, nbytes, rows)
+        self.resident_bytes[node] = self.resident_bytes.get(node, 0) + nbytes
+        self.written_bytes[node] = self.written_bytes.get(node, 0) + nbytes
+        self.app_bytes[app] = self.app_bytes.get(app, 0) + nbytes
+        self.peak_bytes[app] = max(self.peak_bytes.get(app, 0),
+                                   self.app_bytes[app])
+
     def put(self, app: str, stage: str, partition: int, table, node: int,
             writer: str = "") -> int:
         """Write (or, on retry, replace) one writer's slice of a partition.
@@ -196,39 +224,47 @@ class ShuffleStore:
         if self.disaggregated and self.net_bw and writer != "seed":
             time.sleep(nbytes / self.net_bw)
         with self._cond:
-            self._admit(app, stage, partition, writer, nbytes)
-            lost = self._lost.get((app, stage))
-            if lost is not None:
-                # a producer (retry, speculation backup, lineage recompute)
-                # rewriting a lost partition heals it
-                lost.discard(partition)
-                if not lost:
-                    del self._lost[(app, stage)]
-            parts = self._stages.setdefault((app, stage), {})
-            blobs = parts.setdefault(partition, {})
-            old = blobs.get(writer)
-            if old is not None:   # preempted attempt being re-done: retract it
-                self.resident_bytes[old.node] = \
-                    self.resident_bytes.get(old.node, 0) - old.nbytes
-                self.app_bytes[app] = \
-                    self.app_bytes.get(app, 0) - old.nbytes
-            blobs[writer] = Blob(table, node, nbytes, rows)
-            self.resident_bytes[node] = self.resident_bytes.get(node, 0) + nbytes
-            self.written_bytes[node] = self.written_bytes.get(node, 0) + nbytes
-            self.app_bytes[app] = self.app_bytes.get(app, 0) + nbytes
-            self.peak_bytes[app] = max(self.peak_bytes.get(app, 0),
-                                       self.app_bytes[app])
+            self._put_locked(app, stage, partition, table, node, writer,
+                             nbytes, rows)
         return nbytes
 
-    def ingest(self, app: str, stage: str, partitions: Mapping[int, object],
+    def put_many(self, app: str, stage: str, tables: Mapping[int, object],
+                 node: int, writer: str = "") -> int:
+        """Write one writer's slices of *many* partitions in a single store
+        round trip — the columnar-slice shuffle path: the producer computes
+        every bucket in one device pass and publishes them all at once
+        (typically ``TableSlice`` views sharing one parent buffer).
+
+        Per-partition byte accounting, quota admission, and lost-tombstone
+        healing are identical to ``partition``-at-a-time ``put``; the
+        disaggregated transfer charge is one sleep for the *total* bytes
+        (one flow, not P serialized ones). Returns total bytes written.
+        """
+        sized = [(int(p), t, int(t.nbytes), int(t.num_rows))
+                 for p, t in sorted(tables.items())]
+        total = sum(nb for _, _, nb, _ in sized)
+        if self.disaggregated and self.net_bw and writer != "seed" and total:
+            time.sleep(total / self.net_bw)
+        with self._cond:
+            for partition, table, nbytes, rows in sized:
+                self._put_locked(app, stage, partition, table, node, writer,
+                                 nbytes, rows)
+        return total
+
+    def ingest(self, app: str, stage: str, partitions,
                ) -> list[tuple[int, int]]:
-        """Seed base data: one partition per home node (node -> table).
+        """Seed base data: a ``{node: table}`` mapping (one partition per
+        home node, the classic layout) or a ``[(node, table), ...]``
+        sequence (several partitions per node — the fine-grained layout the
+        batched map path coalesces).
 
         Returns ``[(partition_index, home_node), ...]`` in index order — the
         planner's view of where the input lives.
         """
+        pairs = sorted(partitions.items()) if hasattr(partitions, "items") \
+            else list(partitions)
         layout = []
-        for idx, (node, table) in enumerate(sorted(partitions.items())):
+        for idx, (node, table) in enumerate(pairs):
             self.put(app, stage, idx, table, node, writer="seed")
             layout.append((idx, node))
         return layout
@@ -269,10 +305,8 @@ class ShuffleStore:
             else remote
         if account and charged and self.net_bw:
             time.sleep(charged / self.net_bw)
-        out = ordered[0].table
-        for blob in ordered[1:]:
-            out = out.concat(blob.table)
-        return out
+        from repro.analytics.table import Table
+        return Table.concat_all([b.table for b in ordered])
 
     def partitions(self, app: str, stage: str) -> list[int]:
         """Known partition ids: written ∪ lost. Lost ids are included so an

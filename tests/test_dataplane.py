@@ -1,0 +1,404 @@
+"""Vectorized columnar data plane: single-pass shuffle equivalence, the
+columnar-slice store path (put_many / TableSlice / concat_all), invocation
+batching that is invisible to the control plane, and the compute-vs-store
+timing split.
+
+The tentpole invariant under test: batching and the kernel-dispatched
+single-pass shuffle change *how fast* the data plane runs, never *what the
+control plane sees* — same decision sequences, same per-stage record
+counts, same lineage recovery sets, same bytes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.analytics import (
+    QueryStrategy,
+    Table,
+    build_query_workflow,
+    execute_query_runtime,
+    synth_query_tables,
+    synth_table,
+)
+from repro.analytics.table import TableSlice, distribute
+from repro.core.controllers import GlobalController
+from repro.runtime import (
+    CrashFault,
+    FaultInjector,
+    FaultPlan,
+    FnContext,
+    InlineInvoker,
+    Invocation,
+    MetricsSink,
+    Runtime,
+    RuntimeStage,
+    ShuffleStore,
+    StageLossFault,
+    ThreadPoolInvoker,
+)
+
+STRATEGIES = ("static_merge", "static_hash", "dynamic", "dynamic_fig6")
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return synth_query_tables(4096, 512, seed=9)
+
+
+# -- Table.concat_all and TableSlice ----------------------------------------------
+
+
+def test_concat_all_matches_pairwise_chain():
+    parts = [synth_table("t", n, 512, seed=i) for i, n in
+             enumerate((64, 1, 128, 32))]
+    multi = Table.concat_all(parts)
+    chained = parts[0]
+    for p in parts[1:]:
+        chained = Table({k: jnp.concatenate([v, p.columns[k]])
+                         for k, v in chained.columns.items()})
+    assert multi.num_rows == sum(p.num_rows for p in parts)
+    for k in parts[0].columns:
+        np.testing.assert_array_equal(np.asarray(multi[k]),
+                                      np.asarray(chained[k]))
+
+
+def test_dist_table_gather_uses_multiway_concat():
+    t = synth_table("t", 1024, 2048, seed=2)
+    dt = distribute(t, range(8), "A")
+    g = dt.gather()
+    assert g.num_rows == 1024
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(g["key"])), np.sort(np.asarray(t["key"])))
+
+
+def test_table_slice_shares_parent_and_accounts_bytes():
+    t = synth_table("t", 256, 512, seed=1)
+    s = t.slice(32, 96)
+    assert isinstance(s, TableSlice)
+    assert s.num_rows == 64
+    # byte accounting without materialization: rows * per-row bytes
+    assert s.nbytes == t.nbytes * 64 // 256
+    assert s._cache is None            # nothing materialized yet
+    # the view shares the parent buffer object until first access
+    assert s.parent_columns["key"] is t.columns["key"]
+    np.testing.assert_array_equal(np.asarray(s["key"]),
+                                  np.asarray(t["key"][32:96]))
+    assert s._cache is not None        # materialized on first access
+    # ...which drops the pin on the full-size parent buffer, so the real
+    # device footprint matches the accounted nbytes
+    assert s.parent_columns["key"] is not t.columns["key"]
+    assert s.nbytes == t.nbytes * 64 // 256     # unchanged after materialize
+    m = s.materialize()
+    assert isinstance(m, Table) and m.num_rows == 64
+
+
+# -- single-pass shuffle == per-bucket loop ---------------------------------------
+
+
+def _shuffle_ctx(store, func, stage_out, nb):
+    inv = Invocation(f"w/{func}", "app", "shuffle", 0, func, node=0,
+                     params={"src": "in", "dst": stage_out, "partition": 0,
+                             "num_buckets": nb})
+    return FnContext(store, inv)
+
+
+@pytest.mark.parametrize("nb", [1, 3, 8, 32])
+def test_single_pass_shuffle_matches_loop_shuffle(nb):
+    from repro.runtime.functions import shuffle_write, shuffle_write_loop
+
+    t = synth_table("t", 999, 4096, seed=4)   # odd row count: padding path
+    store = ShuffleStore()
+    store.put("app", "in", 0, t, node=0, writer="seed")
+    shuffle_write(_shuffle_ctx(store, "shuffle_write", "fast", nb))
+    shuffle_write_loop(_shuffle_ctx(store, "shuffle_write_loop", "slow", nb))
+
+    assert store.partitions("app", "fast") == store.partitions("app", "slow")
+    for part in store.partitions("app", "fast"):
+        a = store.get("app", "fast", part, node=0, account=False)
+        b = store.get("app", "slow", part, node=0, account=False)
+        assert a.num_rows == b.num_rows and a.nbytes == b.nbytes
+        for k in ("key", "v0", "v1"):
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    fast = store.data_dist("app", "fast")
+    slow = store.data_dist("app", "slow")
+    assert fast.rows == slow.rows == 999
+    assert fast.skew == pytest.approx(slow.skew)
+
+
+def test_shuffle_write_empty_and_tiny_inputs():
+    from repro.runtime.functions import shuffle_write
+
+    store = ShuffleStore()
+    empty = Table({"key": jnp.zeros((0,), jnp.int32),
+                   "v0": jnp.zeros((0,), jnp.float32),
+                   "v1": jnp.zeros((0,), jnp.float32)})
+    store.put("app", "in", 0, empty, node=0, writer="seed")
+    shuffle_write(_shuffle_ctx(store, "shuffle_write", "out", 4))
+    assert store.partitions("app", "out") == []      # nothing written
+
+    one = synth_table("t", 1, 16, seed=0)
+    store.put("app", "in", 0, one, node=0, writer="seed")
+    shuffle_write(_shuffle_ctx(store, "w2", "out2", 4))
+    assert store.data_dist("app", "out2").rows == 1
+
+
+# -- put_many: one round trip, identical accounting -------------------------------
+
+
+def test_put_many_accounting_matches_individual_puts():
+    t = synth_table("t", 256, 512, seed=3)
+    slices = {r: t.slice(r * 64, (r + 1) * 64) for r in range(4)}
+    a, b = ShuffleStore(), ShuffleStore()
+    total = a.put_many("app", "s", slices, node=1, writer="w")
+    for r, s in slices.items():
+        b.put("app", "s", r, s, node=1, writer="w")
+    assert total == t.nbytes
+    assert a.app_bytes == b.app_bytes
+    assert a.resident_bytes == b.resident_bytes
+    assert a.written_bytes == b.written_bytes
+    assert a.partitions("app", "s") == b.partitions("app", "s")
+    # retry under the same writer label replaces, never duplicates
+    a.put_many("app", "s", slices, node=1, writer="w")
+    assert a.app_bytes["app"] == t.nbytes
+
+
+def test_put_many_respects_quota():
+    from repro.runtime import QuotaExceededError
+
+    t = synth_table("t", 256, 512, seed=3)
+    store = ShuffleStore(quota_timeout=0.05)
+    store.set_quota("app", t.nbytes // 2)
+    with pytest.raises(QuotaExceededError):
+        store.put_many("app", "s", {0: t}, node=0, writer="w")
+
+
+def test_put_many_heals_lost_tombstones():
+    t = synth_table("t", 128, 512, seed=5)
+    store = ShuffleStore()
+    store.put_many("app", "s", {0: t.slice(0, 64), 1: t.slice(64, 128)},
+                   node=0, writer="w")
+    store.lose_stage("app", "s")
+    from repro.runtime import StageLostError
+    with pytest.raises(StageLostError):
+        store.get("app", "s", 0, node=0)
+    store.put_many("app", "s", {0: t.slice(0, 64), 1: t.slice(64, 128)},
+                   node=0, writer="w")
+    assert store.get("app", "s", 0, node=0).num_rows == 64
+    assert store.lost_partitions("app", "s") == set()
+
+
+# -- batching is invisible to the control plane -----------------------------------
+
+
+def _control_plane_view(strat, seed, batching, invoker="inline",
+                        map_split=3, plan=None, quota=None):
+    fd, dd, ref = synth_query_tables(2048, 256, seed=seed)
+    wf = build_query_workflow(QueryStrategy(strat))
+    gc = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc, invoker=invoker, batching=batching)
+    if quota is not None:
+        rt.store.set_quota("query", quota)
+    if plan is not None:
+        FaultInjector(plan).install(rt)
+    got, _ = execute_query_runtime(fd, dd, QueryStrategy(strat), runtime=rt,
+                                   workflow=wf, map_split=map_split)
+    np.testing.assert_allclose(got, ref, atol=1e-2)
+    assert sum(gc.used.values()) == 0
+    decisions = [(name, s.node.history[-1][1].func,
+                  s.node.history[-1][1].scale)
+                 for name, s in wf.stages.items() if s.node.history]
+    by_stage = rt.metrics.by_stage("query")
+    rows = {name: (m.invocations, m.ok) for name, m in by_stage.items()}
+    lineage = {(ev.lost_stage, ev.recovered) for ev in rt.recoveries}
+    bytes_out = {name: m.bytes_out for name, m in by_stage.items()}
+    return decisions, rows, lineage, bytes_out
+
+
+@pytest.mark.parametrize("strat", STRATEGIES)
+def test_batching_invisible_to_control_plane(strat):
+    a = _control_plane_view(strat, seed=21, batching=True)
+    b = _control_plane_view(strat, seed=21, batching=False)
+    assert a == b
+
+
+def test_batching_invisible_under_fault_recovery():
+    """Same seeded loss plan: identical decision sequences, record counts
+    and lineage recovery sets with batching on and off."""
+    def plan():
+        return FaultPlan(
+            crashes=[CrashFault("scan_fact", index=1, when="before")],
+            losses=[StageLossFault("joined", partitions=(0,), on_read=1)])
+
+    views = [_control_plane_view("static_merge", seed=33, batching=on,
+                                 plan=plan(), quota=1 << 30)
+             for on in (True, False)]
+    dec_a, rows_a, lin_a, _ = views[0]
+    dec_b, rows_b, lin_b, _ = views[1]
+    assert dec_a == dec_b
+    assert lin_a == lin_b and lin_a        # the loss really recovered
+    # the crash adds exactly one extra (crashed) record in both modes
+    assert rows_a.keys() == rows_b.keys()
+    assert {k: v[1] for k, v in rows_a.items()} == \
+        {k: v[1] for k, v in rows_b.items()}      # identical ok counts
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2 ** 10),
+           strat=st.sampled_from(STRATEGIES),
+           split=st.sampled_from([1, 2, 5]))
+    def test_batching_invisibility_property(seed, strat, split):
+        """Random plans/seeds/splits: decision sequences, per-stage metric
+        row counts and byte totals are identical with batching on vs off."""
+        a = _control_plane_view(strat, seed=seed, batching=True,
+                                map_split=split)
+        b = _control_plane_view(strat, seed=seed, batching=False,
+                                map_split=split)
+        assert a == b
+
+
+def test_batching_coalesces_claims_threads(tables):
+    """Batching on: strictly fewer slot commits than invocations (map
+    stages coalesce); batching off: one commit per attempt."""
+    fd, dd, ref = tables
+    commits = []
+    counts = {}
+    for on in (True, False):
+        gc = GlobalController({n: 8 for n in range(4)})
+        gc.subscribe(lambda ev, claim: commits.append(ev)
+                     if ev == "commit" else None)
+        before = len([c for c in commits if c == "commit"])
+        rt = Runtime(gc, invoker="threads", batching=on)
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"),
+                                       runtime=rt, map_split=4)
+        np.testing.assert_allclose(got, ref, atol=1e-2)
+        n_records = len(rt.metrics.for_app("query"))
+        counts[on] = (len([c for c in commits if c == "commit"]) - before,
+                      n_records)
+    assert counts[True][1] == counts[False][1]     # same per-member records
+    assert counts[True][0] < counts[False][0]      # fewer claims when batched
+
+
+# -- batch crash demotes members to individual retries ----------------------------
+
+
+def _map_stage(app, n, node=0):
+    return RuntimeStage(app, [
+        Invocation(f"{app}/{i}", "q", app, i, "scan_filter", node,
+                   params={"src": "in", "dst": "out", "partition": i},
+                   batchable=True)
+        for i in range(n)])
+
+
+def test_batch_crash_retries_members_individually():
+    gc = GlobalController({0: 4})
+    store, metrics = ShuffleStore(), MetricsSink()
+    t = synth_table("t", 64, 128, seed=0)
+    for i in range(4):
+        store.put("q", "in", i, t, node=0, writer="seed")
+    plan = FaultPlan(crashes=[CrashFault("batchy", index=2, when="before")])
+    rt = Runtime(gc, invoker=InlineInvoker(gc, store, metrics),
+                 store=store, metrics=metrics)
+    FaultInjector(plan).install(rt)
+    rt.execute([_map_stage("batchy", 4)])
+
+    recs = {}
+    for r in metrics.records:
+        recs.setdefault(r.name, []).append((r.status, r.attempt))
+    # crashed member: crashed at the batch attempt, ok on its own attempt 1
+    assert recs["batchy/2"] == [("crashed", 0), ("ok", 1)]
+    # members before the crash committed inside the batch
+    assert recs["batchy/0"] == [("ok", 0)] and recs["batchy/1"] == [("ok", 0)]
+    # the member after the crash re-ran individually at attempt 0
+    assert recs["batchy/3"] == [("ok", 0)]
+    assert sum(gc.used.values()) == 0
+    assert store.data_dist("q", "out").rows == 4 * 64
+
+
+def test_batch_crash_exhaustion_matches_unbatched_budget():
+    """An invocation that crashes on every attempt exhausts the same
+    ``max_attempts`` budget whether its first attempt ran inside a batch
+    or not (demotion must not grant a fresh budget)."""
+    from repro.runtime import InvocationError
+
+    for batching in (True, False):
+        gc = GlobalController({0: 4})
+        store, metrics = ShuffleStore(), MetricsSink()
+        t = synth_table("t", 64, 128, seed=0)
+        for i in range(4):
+            store.put("q", "in", i, t, node=0, writer="seed")
+        plan = FaultPlan(crashes=[CrashFault("batchy", index=1, when="before",
+                                             attempt=a, times=1)
+                                  for a in range(8)])
+        rt = Runtime(gc, invoker=InlineInvoker(gc, store, metrics,
+                                               batching=batching),
+                     store=store, metrics=metrics)
+        FaultInjector(plan).install(rt)
+        with pytest.raises(InvocationError, match="crashed"):
+            rt.execute([_map_stage("batchy", 4)])
+        crashed = [r for r in metrics.records
+                   if r.name == "batchy/1" and r.status == "crashed"]
+        assert [r.attempt for r in crashed] == list(range(5))   # max_attempts
+        assert sum(gc.used.values()) == 0
+
+
+def test_batch_loss_mid_batch_propagates_typed_error():
+    """A StageLostError inside a batch member releases the slot, keeps the
+    completed members' records and propagates for executor recovery."""
+    from repro.runtime import StageLostError
+
+    gc = GlobalController({0: 4})
+    store, metrics = ShuffleStore(), MetricsSink()
+    t = synth_table("t", 64, 128, seed=0)
+    for i in range(4):
+        store.put("q", "in", i, t, node=0, writer="seed")
+    inv = InlineInvoker(gc, store, metrics)
+    store.lose_stage("q", "in", partitions=[2])
+    with pytest.raises(StageLostError):
+        inv.run_stage(_map_stage("batchy", 4).invocations)
+    statuses = [(r.name, r.status) for r in metrics.records]
+    assert ("batchy/0", "ok") in statuses and ("batchy/2", "error") in statuses
+    assert sum(gc.used.values()) == 0             # no slot leak
+
+
+# -- compute vs store-transfer timing split ---------------------------------------
+
+
+def test_store_seconds_split_in_records_and_profile(tables):
+    fd, dd, ref = tables
+    gc = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc, net_bw=200e6, disaggregated=True)
+    got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"),
+                                   runtime=rt)
+    np.testing.assert_allclose(got, ref, atol=1e-2)
+    oks = [r for r in rt.metrics.records if r.status == "ok"]
+    assert oks
+    for r in oks:
+        assert 0.0 <= r.store_seconds <= r.seconds + 1e-6
+        assert r.compute_seconds == pytest.approx(
+            max(0.0, r.seconds - r.store_seconds))
+    # the disaggregated store makes transfer time visible on the scans
+    scan = rt.metrics.by_stage("query")["scan_fact"]
+    assert scan.store_seconds > 0
+    assert scan.seconds == pytest.approx(
+        scan.store_seconds + scan.compute_seconds, rel=1e-6)
+    profile = rt.metrics.profile_feedback("query")
+    assert profile["scan_fact.store_seconds"] > 0
+    assert "scan_fact.compute_seconds" in profile
+
+
+def test_threads_batched_query_matches_oracle_with_split(tables):
+    fd, dd, ref = tables
+    gc = GlobalController({n: 8 for n in range(4)})
+    store, metrics = ShuffleStore(), MetricsSink()
+    rt = Runtime(gc, invoker=ThreadPoolInvoker(gc, store, metrics,
+                                               max_workers=8),
+                 store=store, metrics=metrics)
+    got, _ = execute_query_runtime(fd, dd, QueryStrategy("dynamic"),
+                                   runtime=rt, map_split=6)
+    np.testing.assert_allclose(got, ref, atol=1e-2)
+    assert sum(gc.used.values()) == 0

@@ -137,3 +137,85 @@ def test_partition_is_stable_grouping(seed, p):
         expect = np.nonzero(pids_np == part)[0]
         np.testing.assert_array_equal(seg, expect)
         start += counts[part]
+
+
+# -- dispatch-layer differentials: Pallas kernels vs ref vs numpy oracle ----------
+#
+# The dispatch layer (repro.kernels.ops) must agree with kernels/ref.py AND
+# a from-scratch numpy oracle on the edges the raw kernels cannot express:
+# empty input, a single bucket, every row in one bucket, and bucket counts
+# that are not a power of two. force_kernel=True drives the Pallas path in
+# interpret mode where shapes allow, so CI covers it without a TPU.
+
+
+def _numpy_grouping_oracle(pids: np.ndarray, p: int):
+    """Independent oracle: stable grouping permutation + exclusive offsets."""
+    order = np.argsort(pids, kind="stable")
+    counts = np.bincount(pids, minlength=p)
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return order.astype(np.int32), offsets
+
+
+@pytest.mark.parametrize("force_kernel", [False, True])
+@pytest.mark.parametrize("case", [
+    "empty", "single_bucket", "all_rows_one_bucket", "non_pow2_buckets"])
+def test_grouping_indices_edges_match_numpy_oracle(case, force_kernel):
+    from repro.kernels import ops as kops
+
+    if case == "empty":
+        pids, p = np.zeros((0,), np.int32), 4
+    elif case == "single_bucket":
+        pids, p = np.zeros((96,), np.int32), 1
+    elif case == "all_rows_one_bucket":
+        pids, p = np.full((128,), 2, np.int32), 8
+    else:  # non_pow2_buckets
+        rng = np.random.default_rng(5)
+        pids, p = rng.integers(0, 7, size=200).astype(np.int32), 7
+    order, offsets = kops.grouping_indices(jnp.asarray(pids), p,
+                                           force_kernel=force_kernel)
+    ref_order, ref_offsets = _numpy_grouping_oracle(pids, p)
+    np.testing.assert_array_equal(np.asarray(offsets), ref_offsets)
+    np.testing.assert_array_equal(np.asarray(order), ref_order)
+
+
+@pytest.mark.parametrize("force_kernel", [False, True])
+@pytest.mark.parametrize("n,p", [(0, 4), (256, 1), (128, 8), (384, 6)])
+def test_dispatch_histogram_matches_ref_and_numpy(n, p, force_kernel):
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(n + p)
+    pids = (rng.integers(0, p, size=n).astype(np.int32) if n else
+            np.zeros((0,), np.int32))
+    if n and p == 8:
+        pids[:] = 3          # all rows in one bucket
+    got = np.asarray(kops.partition_histogram(jnp.asarray(pids), p,
+                                              force_kernel=force_kernel))
+    np.testing.assert_array_equal(got, np.bincount(pids, minlength=p))
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.partition_histogram_ref(jnp.asarray(pids), p)))
+
+
+@pytest.mark.parametrize("force_kernel", [False, True])
+@pytest.mark.parametrize("n,p,d", [(0, 4, 3), (128, 1, 2), (256, 8, 2),
+                                   (320, 5, 4)])
+def test_dispatch_scatter_matches_ref_and_numpy(n, p, d, force_kernel):
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(n + p + d)
+    pids = (rng.integers(0, p, size=n).astype(np.int32) if n else
+            np.zeros((0,), np.int32))
+    rows = rng.standard_normal((n, d)).astype(np.float32)
+    got, got_off = kops.partition_scatter(jnp.asarray(rows),
+                                          jnp.asarray(pids), p,
+                                          force_kernel=force_kernel)
+    # numpy oracle: stable grouping
+    order = np.argsort(pids, kind="stable")
+    counts = np.bincount(pids, minlength=p)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(got_off), offsets)
+    np.testing.assert_allclose(np.asarray(got), rows[order])
+    if n:
+        r_out, r_off = ref.partition_scatter_ref(jnp.asarray(rows),
+                                                 jnp.asarray(pids), p)
+        np.testing.assert_array_equal(np.asarray(got_off), np.asarray(r_off))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(r_out))
