@@ -73,6 +73,10 @@ def _run_once(fd, dd, ref, strategy, mode: str, split: int):
     from repro.core.controllers import GlobalController
     from repro.runtime import Runtime, functions as fnlib
 
+    from repro.obs import get_tracer
+
+    # one run per trace buffer: the exported artifact is the last run
+    get_tracer().clear()
     gc = GlobalController({n: SLOTS_PER_NODE for n in range(NODES)})
     rt = Runtime(gc, invoker="inline", batching=(mode == "batched"))
     swapped = fnlib.FUNCTIONS["shuffle_write"]
@@ -132,8 +136,31 @@ def _check_compile_once(fd, dd, ref, fanout: int, split: int,
             "map_invocations": n_map_invocations}
 
 
+def _tracing_overhead(fd, dd, ref, fanout: int, split: int,
+                      reps: int = 3) -> dict:
+    """Best-of-``reps`` wall time with the tracer on vs a disabled tracer —
+    the CI guard that keeps always-on tracing under 5% overhead."""
+    from repro.obs import Tracer, set_tracer
+
+    strategy = _sized_strategy("static_merge", fanout)
+
+    def best(n: int) -> float:
+        return min(_run_once(fd, dd, ref, strategy, "batched", split)[1]
+                   for _ in range(n))
+
+    enabled_s = best(reps)
+    prev = set_tracer(Tracer(enabled=False))
+    try:
+        disabled_s = best(reps)
+    finally:
+        set_tracer(prev)
+    return {"enabled_s": enabled_s, "disabled_s": disabled_s,
+            "overhead_pct": 100.0 * (enabled_s / disabled_s - 1.0)}
+
+
 def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
-         out_path: Path | str | None = None) -> dict:
+         out_path: Path | str | None = None,
+         overhead_check: bool = False) -> dict:
     from repro.analytics import synth_query_tables
 
     own = rows is None
@@ -194,6 +221,8 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
                 compile_once["rerun_delta"] == 0,
         },
     }
+    from repro.obs import write_bench_artifacts
+
     report = {
         "benchmark": "dataplane_loop_vs_batched_columnar",
         "invoker": "inline",
@@ -203,7 +232,17 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
                    "strategies": list(STRATEGIES), "smoke": smoke},
         "results": results,
         "summary": summary,
+        # trace of the last timed run + the query's critical path
+        "observability": write_bench_artifacts(out_path, apps=["query"]),
     }
+    if overhead_check:
+        oh = _tracing_overhead(fd, dd, ref, fanout, split, reps=max(reps, 3))
+        report["observability"]["tracing_overhead"] = oh
+        summary["criteria"]["tracing_overhead_under_5pct"] = \
+            oh["overhead_pct"] < 5.0
+        assert oh["overhead_pct"] < 5.0, (
+            f"always-on tracing costs {oh['overhead_pct']:.1f}% "
+            f"({oh['enabled_s']:.3f}s vs {oh['disabled_s']:.3f}s disabled)")
     Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
     rows.append(("dataplane/shuffle_speedup", 0.0,
                  round(shuffle_speedup, 2)))
@@ -228,7 +267,10 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None,
                     help="output JSON (default: BENCH_dataplane.json, or "
                          "BENCH_dataplane_smoke.json under --smoke)")
+    ap.add_argument("--overhead-check", action="store_true",
+                    help="also time a tracer-disabled run and assert the "
+                         "always-on tracer costs < 5%% wall time")
     args = ap.parse_args()
     main(smoke=args.smoke,
          reps=args.reps if args.reps is not None else (1 if args.smoke else 3),
-         out_path=args.out)
+         out_path=args.out, overhead_check=args.overhead_check)

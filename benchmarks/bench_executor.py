@@ -54,6 +54,10 @@ def _run_once(fd, dd, strategy: str, barrier: bool):
     from repro.core.controllers import GlobalController
     from repro.runtime import Runtime
 
+    from repro.obs import get_tracer
+
+    # one run per trace buffer: the exported artifact is the last run
+    get_tracer().clear()
     gc = GlobalController({n: 8 for n in range(4)})
     runtime = Runtime(gc, invoker="threads", net_bw=NET_BW,
                       disaggregated=True)
@@ -67,6 +71,8 @@ def _run_once(fd, dd, strategy: str, barrier: bool):
 def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
          out_path: Path | str | None = None) -> dict:
     import numpy as np
+
+    from repro.obs import write_bench_artifacts
 
     own = rows is None
     rows = [] if own else rows
@@ -104,6 +110,8 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
         "summary": {"barrier_total_s": barrier_total,
                     "deps_total_s": deps_total,
                     "speedup": barrier_total / deps_total},
+        # trace of the last timed (deps) run + the query's critical path
+        "observability": write_bench_artifacts(out_path, apps=["query"]),
     }
     Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
     rows.append(("executor/total/deps", deps_total * 1e6,

@@ -188,7 +188,12 @@ def main(rows: list | None = None, smoke: bool = False,
     fd, dd, ref = synth_query_tables(n_rows, n_dim, seed=17,
                                      fact_nodes=NODES, dim_nodes=[0, 1])
 
+    from repro.obs import get_tracer, write_bench_artifacts
+
     recovery = {s: _bench_recovery(fd, dd, ref, s) for s in STRATEGIES}
+    # speculation runs last with a fresh buffer: the exported artifact shows
+    # the straggler, the speculate/* markers and the backup invocations
+    get_tracer().clear()
     speculation = _bench_speculation(fd, dd, ref, delay)
 
     total_lineage = sum(r["lineage_reexec"] for r in recovery.values())
@@ -215,6 +220,8 @@ def main(rows: list | None = None, smoke: bool = False,
         "recovery": recovery,
         "speculation": speculation,
         "summary": summary,
+        # trace of the speculation runs + the query's critical path
+        "observability": write_bench_artifacts(out_path, apps=["query"]),
     }
     Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
 

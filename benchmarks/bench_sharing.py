@@ -67,8 +67,12 @@ def _run_policy(jobs, policy: str):
     import numpy as np
 
     from repro.core.controllers import GlobalController
+    from repro.obs import get_tracer
     from repro.runtime import QueryJob, QueryScheduler, Runtime
 
+    # one workload execution per trace buffer: after the last rep the
+    # exported artifact is exactly the final policy's final run
+    get_tracer().clear()
     gc = GlobalController({n: SLOTS_PER_NODE for n in range(NODES)})
     runtime = Runtime(gc, invoker="threads", max_workers=16,
                       net_bw=NET_BW, disaggregated=True)
@@ -160,6 +164,8 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 5,
             "makespan_within_10pct_of_fifo": makespan_ratio <= 1.10,
         },
     }
+    from repro.obs import write_bench_artifacts
+
     report = {
         "benchmark": "sharing_fifo_vs_fair_share",
         "config": {"queries": N_QUERIES, "rows": n_rows, "dim_rows": n_dim,
@@ -169,6 +175,9 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 5,
                    "reps": reps, "smoke": smoke},
         "policies": policies,
         "summary": summary,
+        # trace of the final fair_share rep + per-query critical paths
+        "observability": write_bench_artifacts(
+            out_path, apps=[j["app"] for j in jobs]),
     }
     Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
 

@@ -112,6 +112,8 @@ def run_scheduled_mix():
     print("\nsix-query mix through the QueryScheduler "
           "(lo,hi alternating arrivals):")
     for policy in ("fifo", "fair_share"):
+        from repro.obs import get_tracer
+        get_tracer().clear()      # trace exactly this policy's mix
         # 2 slots/node + disaggregated store (5 MB/s): function slots are
         # the contended resource, which is what the policies ration
         gc = GlobalController({n: 2 for n in range(4)})
@@ -133,6 +135,15 @@ def run_scheduled_mix():
         print(f"  {policy:10s} makespan {sched.makespan():6.2f}s  "
               f"hi-prio latency p50 {hi[len(hi) // 2]:5.2f}s  "
               f"worst {hi[-1]:5.2f}s")
+        # observability: where did q0's makespan actually go under this
+        # policy? (compute vs store transfer vs slot/admission waits)
+        from repro.obs import critical_path
+        cp = critical_path(get_tracer().spans(), app="q0")
+        if cp is not None:
+            b = cp.breakdown
+            print(f"  {'':10s} q0 critical path: dominant {cp.dominant} "
+                  f"(compute {b['compute']:.2f}s store {b['store']:.2f}s "
+                  f"slot_wait {b['slot_wait']:.2f}s queue {b['queue']:.2f}s)")
 
 
 def main():

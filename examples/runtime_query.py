@@ -70,6 +70,20 @@ def main():
         print(f"trace replay: {n} invocations -> simulated completion "
               f"{out['completion']['query'] * 1e3:.2f} ms")
 
+        # observability: the span DAG's critical path and the audit log's
+        # record of every decision binding (diffable vs run.sequence above)
+        from repro.obs import critical_path, get_audit_log, get_tracer
+        cp = critical_path(get_tracer().spans(), app="query")
+        if cp is not None:
+            print(cp.format())
+        audited = get_audit_log().sequence("query",
+                                           nodes=[s for s, _ in run.sequence])
+        print(f"audit log: {audited} "
+              f"{'==' if audited == [(s, d.func) for s, d in run.sequence] else '!='} "
+              f"run.sequence")
+        get_tracer().clear()      # fresh trace + audit buffers per strategy
+        get_audit_log().clear()
+
 
 if __name__ == "__main__":
     main()

@@ -146,13 +146,17 @@ def build_query_workflow(strategy, name: str | None = None,
     the join stage) but await only the scan feedback.
     """
     wf = DecisionWorkflow(name or f"query[{strategy.name}]")
-    wf.add(DecisionNode("scan", scan_decision))
+    wf.add(DecisionNode("scan", scan_decision,
+                        candidates=("scan_filter",)))
     wf.add(DecisionNode("join",
-                        strategy_join_fn(strategy, consolidate_threshold)),
+                        strategy_join_fn(strategy, consolidate_threshold),
+                        candidates=("hash_join", "merge_join")),
            depends_on=("scan",))
-    wf.add(DecisionNode("exchange", exchange_decision),
+    wf.add(DecisionNode("exchange", exchange_decision,
+                        candidates=("shuffle", "broadcast")),
            depends_on=("join",), await_feedback=("scan",))
-    wf.add(DecisionNode("aggregate", aggregate_decision),
+    wf.add(DecisionNode("aggregate", aggregate_decision,
+                        candidates=("two_phase",)),
            depends_on=("exchange",), await_feedback=("scan",))
     return wf
 
@@ -452,6 +456,7 @@ def plan_query_with_workflow(sim, pc, fact, dim, strategy,
     ctx = DecisionContext(data_dist={"A": dist_f, "B": dist_d},
                           node_status=status, profile=dict(pc.profile))
     run = wf.start(ctx)
+    run.app = app
     run.decide("scan")
 
     # simulate the scan stage: the estimated post-filter output distribution

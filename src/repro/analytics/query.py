@@ -193,6 +193,7 @@ def prepare_query_plan(runtime, fact: DistTable, dim: DistTable,
         data_dist={"A": dist_f, "B": dist_d},
         node_status=runtime.gc.node_status(), profile=dict(pc.profile))
     run = wf.start(ctx)
+    run.app = app
 
     fact_parts = fact.partitions if map_split <= 1 \
         else split_partitions(fact.partitions, map_split)

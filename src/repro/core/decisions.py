@@ -158,16 +158,27 @@ class DecisionNode:
     ``history`` keeps the last ``max_history`` decisions (bounded so
     long-lived nodes shared across many queries don't grow without limit);
     it is what profiling dashboards and the re-plan tests inspect.
+    ``candidates`` names the implementation variants the node chooses among
+    (purely declarative — recorded in the decision audit log so a binding
+    shows what it picked *against*).
+
+    Every binding is reported to the global ``DecisionAuditLog``
+    (``repro.obs.audit``) together with the context snapshot it saw —
+    profile feedback, data distributions, free slots, upstream decisions —
+    attributed to the query the calling scope bound via ``bound_app``.
     """
 
     def __init__(self, name: str, fn: DecisionFn,
-                 fallback: DecisionFn | None = None, max_history: int = 64):
+                 fallback: DecisionFn | None = None, max_history: int = 64,
+                 candidates: Sequence[str] = ()):
         self.name = name
         self.fn = fn
         self.fallback = fallback
+        self.candidates = tuple(candidates)
         self.history: deque[tuple[float, Decision]] = deque(maxlen=max_history)
 
     def decide(self, ctx: DecisionContext) -> Decision:
+        from repro.obs.audit import get_audit_log
         try:
             decision = self.fn(ctx)
         except Exception:
@@ -175,6 +186,7 @@ class DecisionNode:
                 raise
             decision = self.fallback(ctx)
         self.history.append((time.monotonic(), decision))
+        get_audit_log().record(self, ctx, decision)
         return decision
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -189,7 +201,7 @@ def default_node(name: str, func: str = "default") -> DecisionNode:
         scale = max(1, ctx.node_status.free(nodes))
         return Decision(func, scale, Schedule("round-robin", nodes))
 
-    return DecisionNode(name, fn)
+    return DecisionNode(name, fn, candidates=(func,))
 
 
 # ---------------------------------------------------------------------------
@@ -240,7 +252,8 @@ def speculation_node(multiple: float = 2.0, min_done: int = 2,
             return Decision("speculate", 1, Schedule("round-robin", nodes))
         return Decision("wait", 0, Schedule("round-robin", nodes))
 
-    return DecisionNode("speculation", fn)
+    return DecisionNode("speculation", fn,
+                        candidates=("speculate", "wait"))
 
 
 def recovery_node(max_reexec_frac: float = 0.5) -> DecisionNode:
@@ -262,7 +275,8 @@ def recovery_node(max_reexec_frac: float = 0.5) -> DecisionNode:
         func = "recompute" if n_re <= max_reexec_frac * total else "rerun"
         return Decision(func, n_re, Schedule("round-robin", nodes))
 
-    return DecisionNode("recovery", fn)
+    return DecisionNode("recovery", fn,
+                        candidates=("recompute", "rerun"))
 
 
 @dataclass
@@ -314,6 +328,9 @@ class WorkflowRun:
     def __init__(self, workflow: "DecisionWorkflow", ctx: DecisionContext):
         self.workflow = workflow
         self.ctx = ctx
+        # the application this run plans for — set by the planner entry
+        # points so decision audit entries attribute to the right query
+        self.app: str | None = None
         self.decisions: dict[str, Decision] = {}
         self.fed: set[str] = set()
 
@@ -339,7 +356,9 @@ class WorkflowRun:
             raise LateBindingError(
                 f"stage {name!r} is not ready: undecided deps {undecided}, "
                 f"awaiting feedback from {unfed}")
-        decision = stage.node.decide(self.ctx)
+        from repro.obs.audit import bound_app
+        with bound_app(self.app):
+            decision = stage.node.decide(self.ctx)
         self.decisions[name] = decision
         self.ctx.decisions = dict(self.ctx.decisions, **{name: decision})
         return decision

@@ -125,6 +125,11 @@ def _pad_len(n: int) -> int:
     return max(8, 1 << int(np.ceil(np.log2(max(1, n)))))
 
 
+# (padded_len, num_partitions) pairs already dispatched — tells the kernel
+# span whether this call paid a fresh trace/compile or hit the jit cache
+_SHAPE_CLASSES: set[tuple[int, int]] = set()
+
+
 @partial(jax.jit, static_argnames=("num_partitions",))
 def _grouping_padded(pids_padded: jax.Array, num_partitions: int):
     """Grouping permutation over a padded id vector.
@@ -156,26 +161,34 @@ def grouping_indices(part_ids, num_partitions: int,
     heterogeneous per-partition row counts share a handful of compiled
     executables.
     """
+    from repro.obs.tracer import get_tracer
+
     n = int(part_ids.shape[0])
     if n == 0:
         return (jnp.zeros((0,), jnp.int32),
                 jnp.zeros((num_partitions + 1,), jnp.int32))
     n_pad = _pad_len(n)
-    pids = jnp.asarray(part_ids, jnp.int32)
-    if n_pad != n:
-        pids = jnp.concatenate(
-            [pids, jnp.full((n_pad - n,), num_partitions, jnp.int32)])
-    if on_tpu() or force_kernel:
-        # Pallas path: scatter the index column through the kernel — the
-        # grouped output *is* the permutation (sentinel rows land last),
-        # and the kernel's per-partition bases over num_partitions + 1
-        # buckets *are* the offsets vector ([0, c0, c0+c1, ..., n]).
-        idx = jnp.arange(n_pad, dtype=jnp.int32)[:, None]
-        grouped, part_base = _scatter(idx, pids, num_partitions + 1,
-                                      interpret=not on_tpu())
-        return grouped[:, 0][:n], part_base
-    order, offsets = _grouping_padded(pids, num_partitions)
-    return order[:n], offsets
+    shape_class = (n_pad, num_partitions)
+    fresh = shape_class not in _SHAPE_CLASSES
+    _SHAPE_CLASSES.add(shape_class)
+    with get_tracer().span("kernel/grouping", "kernel", rows=n,
+                           shape_class=n_pad, buckets=num_partitions,
+                           compile="fresh" if fresh else "cached"):
+        pids = jnp.asarray(part_ids, jnp.int32)
+        if n_pad != n:
+            pids = jnp.concatenate(
+                [pids, jnp.full((n_pad - n,), num_partitions, jnp.int32)])
+        if on_tpu() or force_kernel:
+            # Pallas path: scatter the index column through the kernel — the
+            # grouped output *is* the permutation (sentinel rows land last),
+            # and the kernel's per-partition bases over num_partitions + 1
+            # buckets *are* the offsets vector ([0, c0, c0+c1, ..., n]).
+            idx = jnp.arange(n_pad, dtype=jnp.int32)[:, None]
+            grouped, part_base = _scatter(idx, pids, num_partitions + 1,
+                                          interpret=not on_tpu())
+            return grouped[:, 0][:n], part_base
+        order, offsets = _grouping_padded(pids, num_partitions)
+        return order[:n], offsets
 
 
 def grouping_cache_size() -> int:

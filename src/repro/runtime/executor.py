@@ -29,6 +29,8 @@ import numpy as np
 
 from repro.core.controllers import GlobalController, PrivateController
 from repro.core.decisions import DecisionContext, DecisionNode
+from repro.obs.audit import bound_app
+from repro.obs.tracer import get_tracer
 from repro.runtime.faults import RecoveryError
 from repro.runtime.invoker import (
     InlineInvoker,
@@ -125,6 +127,15 @@ class DAGExecutor:
                    if st.invocations)
         invoker = self.runtime.invoker
         metrics = self.runtime.metrics
+        # root the query's span tree: when no scheduler anchored a
+        # ("query", app) span (direct executor use), open one here so stage
+        # spans always have a live cross-thread parent
+        tr = get_tracer()
+        own_root = None
+        if tr.enabled and tr.anchored(("query", app)) is None:
+            own_root = tr.start(f"query/{app}", "executor", trace=app,
+                                parent=None)
+            tr.anchor(("query", app), own_root)
 
         def dep_invs(st: RuntimeStage) -> tuple[str, ...]:
             return tuple(inv.name for d in st.deps
@@ -142,11 +153,17 @@ class DAGExecutor:
                 # app needs headroom); otherwise dropped immediately
                 self.runtime.store.reclaim_stage(app, src)
 
-        if self.barrier or not getattr(invoker, "parallel", False):
-            self._run_serial(pending, completed, invoker, dep_invs, finish)
-        else:
-            self._run_concurrent(pending, completed, invoker, dep_invs,
+        try:
+            if self.barrier or not getattr(invoker, "parallel", False):
+                self._run_serial(pending, completed, invoker, dep_invs,
                                  finish)
+            else:
+                self._run_concurrent(pending, completed, invoker, dep_invs,
+                                     finish)
+        finally:
+            if own_root is not None:
+                tr.release_anchor(("query", app))
+                tr.end(own_root, stages=len(known))
         return metrics.by_stage(app)
 
     def _run_serial(self, pending, completed, invoker, dep_invs, finish):
@@ -214,34 +231,50 @@ class DAGExecutor:
         """
         invoker = self.runtime.invoker
         metrics = self.runtime.metrics
+        # stage lifecycle span, anchored so invocation spans in invoker
+        # worker threads parent to it; trace id = the app
+        tr = get_tracer()
+        app = st.invocations[0].app if st.invocations else None
+        ssp = None
+        if app is not None:
+            ssp = tr.start(f"stage/{st.name}", "executor", trace=app,
+                           parent=tr.anchored(("query", app)), stage=st.name,
+                           deps=list(st.deps), decision=st.decision,
+                           invocations=len(st.invocations))
+            tr.anchor(("stage", app, st.name), ssp)
         # only records born in *this* run count as committed: a rerun of the
         # same app on the same Runtime must not skip invocations whose
         # previous-attempt outputs were torn down with the old store state
         first_record = len(metrics.records)
         todo = list(st.invocations)
         rounds = 0
-        while True:
-            try:
-                if todo:
-                    invoker.run_stage(todo, deps=deps)
-                return
-            except StageLostError as e:
-                rounds += 1
-                if rounds > self.max_recoveries:
-                    raise RecoveryError(
-                        f"stage {st.name!r}: recovery budget "
-                        f"({self.max_recoveries}) exhausted healing "
-                        f"{e.stage!r}") from e
+        try:
+            while True:
                 try:
-                    self._recover(e)
-                except StageLostError:
-                    # deeper loss mid-recovery: replan next round against
-                    # the store's current state
-                    pass
-                ok = {r.name for r in metrics.records[first_record:]
-                      if r.stage == st.name and r.status == "ok"}
-                todo = [iv for iv in st.invocations if iv.name not in ok] \
-                    or list(st.invocations)
+                    if todo:
+                        invoker.run_stage(todo, deps=deps)
+                    return
+                except StageLostError as e:
+                    rounds += 1
+                    if rounds > self.max_recoveries:
+                        raise RecoveryError(
+                            f"stage {st.name!r}: recovery budget "
+                            f"({self.max_recoveries}) exhausted healing "
+                            f"{e.stage!r}") from e
+                    try:
+                        self._recover(e)
+                    except StageLostError:
+                        # deeper loss mid-recovery: replan next round against
+                        # the store's current state
+                        pass
+                    ok = {r.name for r in metrics.records[first_record:]
+                          if r.stage == st.name and r.status == "ok"}
+                    todo = [iv for iv in st.invocations
+                            if iv.name not in ok] or list(st.invocations)
+        finally:
+            if app is not None:
+                tr.release_anchor(("stage", app, st.name))
+                tr.end(ssp, recovery_rounds=rounds)
 
     def _recover(self, err: StageLostError) -> None:
         """Re-execute the lost partitions' producers, bottom-up."""
@@ -270,14 +303,19 @@ class DAGExecutor:
                     f"{err.app!r}/{err.stage!r}: recovery policy chose "
                     f"whole-query rerun over recomputing {n_invs} "
                     f"invocations") from err
-            for data_stage, parts, invs in plan:
-                if invs:
-                    self.runtime.invoker.run_stage(invs, deps=())
-                # producers re-ran: any still-absent healed partition is
-                # genuinely empty, not missing — but only the partitions
-                # this plan covered
-                store.clear_lost(err.app, data_stage,
-                                 None if parts is None else sorted(parts))
+            tr = get_tracer()
+            with tr.span(f"recovery/{err.stage}", "executor", trace=err.app,
+                         parent=tr.anchored(("query", err.app)),
+                         lost_stage=err.stage, partitions=list(target),
+                         reexec_invocations=n_invs):
+                for data_stage, parts, invs in plan:
+                    if invs:
+                        self.runtime.invoker.run_stage(invs, deps=())
+                    # producers re-ran: any still-absent healed partition is
+                    # genuinely empty, not missing — but only the partitions
+                    # this plan covered
+                    store.clear_lost(err.app, data_stage,
+                                     None if parts is None else sorted(parts))
             self.runtime.recoveries.append(RecoveryEvent(
                 err.app, err.stage, tuple(target),
                 tuple(ds for ds, _, _ in plan), n_invs))
@@ -292,8 +330,9 @@ class DAGExecutor:
                     "recovery.total_invocations":
                         self.runtime.lineage.total_invocations(err.app),
                 })
-            return "rerun" if self.recovery.decide(ctx).func == "rerun" \
-                else "recompute"
+            with bound_app(err.app):
+                decision = self.recovery.decide(ctx)
+            return "rerun" if decision.func == "rerun" else "recompute"
         return "rerun" if self.recovery == "rerun" else "recompute"
 
 

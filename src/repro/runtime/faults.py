@@ -235,13 +235,15 @@ class SpeculationPolicy:
                     done_seconds: Sequence[float],
                     status: NodeStatus) -> int | None:
         """The node to launch a backup on, or None to keep waiting."""
+        from repro.obs.audit import bound_app
         ctx = DecisionContext(node_status=status, profile={
             "speculation.stage": inv.stage,
             "speculation.node": inv.node,
             "speculation.elapsed_s": elapsed,
             "speculation.done_s": tuple(done_seconds),
         })
-        decision = self.node.decide(ctx)
+        with bound_app(inv.app):
+            decision = self.node.decide(ctx)
         if decision.func != "speculate" or decision.scale < 1:
             return None
         placed = decision.schedule.place(1)

@@ -38,6 +38,7 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Mapping, Sequence
 
 from repro.core.controllers import GlobalController
+from repro.obs.tracer import get_tracer
 from repro.runtime.faults import InjectedCrashError
 from repro.runtime.metrics import InvocationRecord, MetricsSink
 from repro.runtime.store import ShuffleStore
@@ -270,12 +271,36 @@ class Invoker:
         or preempted batch, so retry attempts (and the fault plan's
         ``attempt`` matching) continue where the batch left off — against
         the same total ``max_attempts`` budget, so an invocation that
-        crashes on every attempt exhausts identically batched or not."""
+        crashes on every attempt exhausts identically batched or not.
+
+        The whole claim/execute/retry loop runs under one ``invoker`` span
+        (parented to the executor's anchored stage span); each attempt adds
+        a child attempt span, each blocked acquisition a child ``wait``
+        span, and store traffic inside the function body nests via the
+        thread-local span stack.
+        """
+        tr = get_tracer()
+        if not tr.enabled:
+            return self._execute_one_traced(inv, deps, first_attempt, tr,
+                                            None)
+        parent = tr.anchored(("stage", inv.app, inv.stage))
+        kw = {} if parent is None else {"parent": parent}
+        with tr.span(inv.name, "invoker", trace=inv.app, node=inv.node,
+                     stage=inv.stage, func=inv.func, kind="invocation",
+                     **kw) as sp:
+            return self._execute_one_traced(inv, deps, first_attempt, tr, sp)
+
+    def _execute_one_traced(self, inv: Invocation, deps: tuple[str, ...],
+                            first_attempt: int, tr, sp) -> None:
         fn = self._resolve(inv.func)
         wait = self.starve_wait if self.starve_wait > 0 else self.RELEASE_WAIT
         for attempt in range(first_attempt, self.max_attempts):
             if self.gate is not None:
+                tg = time.perf_counter()
                 self.gate.acquire(inv)
+                if sp is not None and time.perf_counter() - tg > 1e-4:
+                    tr.record("gate_wait", "wait", tg, trace=inv.app,
+                              node=inv.node, parent=sp, attempt=attempt)
             claim = None
             try:
                 # Sample the node's release epoch *before* the attempt: if
@@ -293,8 +318,13 @@ class Invoker:
                 # every slot on the node is held by >=-priority work: block
                 # until a claim on *this* node releases (unrelated nodes'
                 # churn must not burn the retry budget), then retry
+                tw = time.perf_counter()
                 self.gc.wait_for_release(epoch, timeout=wait, node=inv.node)
+                if sp is not None:
+                    tr.record("slot_wait", "wait", tw, trace=inv.app,
+                              node=inv.node, parent=sp, attempt=attempt)
                 continue
+            tr.count(f"slots/node{inv.node}", 1, delta=True)
             crashed = None
             # timed from claim commit: injected latency (stragglers) is part
             # of the invocation's observed duration, which is what the
@@ -318,6 +348,7 @@ class Invoker:
                     # duplicates)
                     crashed = e
                     self.gc.finish(claim)
+                    tr.count(f"slots/node{inv.node}", -1, delta=True)
                 except BaseException:
                     # any other failure while the claim is live — the
                     # registered function itself raising, the intercept
@@ -325,14 +356,21 @@ class Invoker:
                     # the slot, not leak it (a leaked slot deadlocks
                     # FairShareGate accounting)
                     self.gc.finish(claim)
+                    tr.count(f"slots/node{inv.node}", -1, delta=True)
                     self.metrics.record(InvocationRecord(
                         inv.name, inv.app, inv.stage, inv.func, inv.node,
                         attempt, "error", t0, time.perf_counter(), deps=deps,
                         priority=inv.priority))
+                    if sp is not None:
+                        sp.attrs.update(status="error", attempts=attempt + 1)
+                        tr.record(f"attempt/{attempt}", "invoker", t0,
+                                  trace=inv.app, node=inv.node, parent=sp,
+                                  kind="attempt", status="error")
                     raise
                 if crashed is None:
                     t1 = time.perf_counter()
                     committed = self.gc.finish(claim)
+                    tr.count(f"slots/node{inv.node}", -1, delta=True)
             finally:
                 if self.gate is not None:
                     self.gate.release(inv)
@@ -341,14 +379,24 @@ class Invoker:
                     inv.name, inv.app, inv.stage, inv.func, inv.node,
                     attempt, "crashed", t0, time.perf_counter(), deps=deps,
                     priority=inv.priority))
+                if sp is not None:
+                    tr.record(f"attempt/{attempt}", "invoker", t0,
+                              trace=inv.app, node=inv.node, parent=sp,
+                              kind="attempt", status="crashed")
                 continue
+            status = "ok" if committed else "preempted"
             self.metrics.record(InvocationRecord(
                 inv.name, inv.app, inv.stage, inv.func, inv.node, attempt,
-                "ok" if committed else "preempted", t0, t1,
+                status, t0, t1,
                 bytes_in=ctx.bytes_in, bytes_out=ctx.bytes_out,
                 store_seconds=ctx.store_seconds,
                 reads_by_node=dict(ctx.reads_by_node), deps=deps,
                 priority=inv.priority, writes=tuple(ctx.writes)))
+            if sp is not None:
+                sp.attrs.update(status=status, attempts=attempt + 1)
+                tr.record(f"attempt/{attempt}", "invoker", t0, end=t1,
+                          trace=inv.app, node=inv.node, parent=sp,
+                          kind="attempt", status=status)
             if committed:
                 return
         self.metrics.record(InvocationRecord(
@@ -356,6 +404,8 @@ class Invoker:
             self.max_attempts, "starved",
             time.perf_counter(), time.perf_counter(), deps=deps,
             priority=inv.priority))
+        if sp is not None:
+            sp.attrs.update(status="starved", attempts=self.max_attempts)
         raise InvocationError(
             f"{inv.name}: no slot committed after {self.max_attempts} "
             f"attempts (preempted/starved by higher-priority claims, or "
@@ -393,6 +443,32 @@ class Invoker:
         records completed members, releases the slot and propagates, which
         is what the executor's recovery loop expects.
         """
+        tr = get_tracer()
+        first = invs[0]
+        if not tr.enabled:
+            retry = self._execute_batch_traced(invs, deps, tr, None)
+        else:
+            parent = tr.anchored(("stage", first.app, first.stage))
+            kw = {} if parent is None else {"parent": parent}
+            with tr.span(f"batch/{first.stage}@{first.node}", "invoker",
+                         trace=first.app, node=first.node, stage=first.stage,
+                         func=first.func, kind="batch", members=len(invs),
+                         **kw) as sp:
+                if sp is not None:
+                    sp.attrs["demoted"] = 0
+                retry = self._execute_batch_traced(invs, deps, tr, sp)
+                if sp is not None:
+                    sp.attrs["demoted"] = len(retry)
+        # demotion runs *outside* the batch span: the demoted members are no
+        # longer under the batch claim and open their own invocation spans
+        for inv, first_attempt in retry:
+            self._execute_one(inv, deps, first_attempt=first_attempt)
+
+    def _execute_batch_traced(self, invs: list[Invocation],
+                              deps: tuple[str, ...], tr, sp,
+                              ) -> list[tuple[Invocation, int]]:
+        """The batch claim loop; returns the members to demote (empty when
+        the whole batch committed)."""
         first = invs[0]
         # resolve before any claim: an unregistered function must raise
         # while no slot is held (all members share func by the grouping key)
@@ -400,7 +476,11 @@ class Invoker:
         wait = self.starve_wait if self.starve_wait > 0 else self.RELEASE_WAIT
         for attempt in range(self.max_attempts):
             if self.gate is not None:
+                tg = time.perf_counter()
                 self.gate.acquire(first)
+                if sp is not None and time.perf_counter() - tg > 1e-4:
+                    tr.record("gate_wait", "wait", tg, trace=first.app,
+                              node=first.node, parent=sp, attempt=attempt)
             claim = None
             try:
                 epoch = self.gc.release_epoch(first.node)
@@ -411,52 +491,79 @@ class Invoker:
                 if claim is None and self.gate is not None:
                     self.gate.release(first)
             if claim is None:
+                tw = time.perf_counter()
                 self.gc.wait_for_release(epoch, timeout=wait,
                                          node=first.node)
+                if sp is not None:
+                    tr.record("slot_wait", "wait", tw, trace=first.app,
+                              node=first.node, parent=sp, attempt=attempt)
                 continue
+            tr.count(f"slots/node{first.node}", 1, delta=True)
             done: list[tuple[Invocation, FnContext, float, float]] = []
+            member_spans: list = []
             crashed_at: int | None = None
             claim_alive = True
             try:
                 for k, inv in enumerate(invs):
-                    t0 = time.perf_counter()
-                    try:
-                        if self.intercept is not None:
-                            self.intercept(inv, attempt)
-                        if self.injector is not None:
-                            self.injector.before_body(inv, attempt)
-                        ctx = FnContext(self.store, inv)
-                        fn(ctx)
-                        if self.injector is not None:
-                            self.injector.after_body(inv, attempt)
-                    except InjectedCrashError:
-                        crashed_at = k
-                        claim_alive = self.gc.finish(claim)
-                        self._record_member(inv, attempt, "crashed", t0,
-                                            time.perf_counter(), deps)
-                        break
-                    except BaseException:
-                        claim_alive = self.gc.finish(claim)
-                        for v, vctx, v0, v1 in done:
-                            self._record_member(
-                                v, attempt,
-                                "ok" if claim_alive else "preempted",
-                                v0, v1, deps, vctx)
-                        self._record_member(inv, attempt, "error", t0,
-                                            time.perf_counter(), deps)
-                        raise
-                    done.append((inv, ctx, t0, time.perf_counter()))
+                    with tr.span(inv.name, "invoker", trace=inv.app,
+                                 node=inv.node, parent=sp, stage=inv.stage,
+                                 func=inv.func, kind="invocation",
+                                 attempt=attempt) as msp:
+                        t0 = time.perf_counter()
+                        try:
+                            if self.intercept is not None:
+                                self.intercept(inv, attempt)
+                            if self.injector is not None:
+                                self.injector.before_body(inv, attempt)
+                            ctx = FnContext(self.store, inv)
+                            fn(ctx)
+                            if self.injector is not None:
+                                self.injector.after_body(inv, attempt)
+                        except InjectedCrashError:
+                            crashed_at = k
+                            claim_alive = self.gc.finish(claim)
+                            tr.count(f"slots/node{first.node}", -1,
+                                     delta=True)
+                            self._record_member(inv, attempt, "crashed", t0,
+                                                time.perf_counter(), deps)
+                            if msp is not None:
+                                msp.attrs["status"] = "crashed"
+                            break
+                        except BaseException:
+                            claim_alive = self.gc.finish(claim)
+                            tr.count(f"slots/node{first.node}", -1,
+                                     delta=True)
+                            for v, vctx, v0, v1 in done:
+                                self._record_member(
+                                    v, attempt,
+                                    "ok" if claim_alive else "preempted",
+                                    v0, v1, deps, vctx)
+                            for vsp in member_spans:
+                                vsp.attrs["status"] = \
+                                    "ok" if claim_alive else "preempted"
+                            self._record_member(inv, attempt, "error", t0,
+                                                time.perf_counter(), deps)
+                            if msp is not None:
+                                msp.attrs["status"] = "error"
+                            raise
+                        done.append((inv, ctx, t0, time.perf_counter()))
+                        if msp is not None:
+                            member_spans.append(msp)
                 if crashed_at is None:
                     claim_alive = self.gc.finish(claim)
+                    tr.count(f"slots/node{first.node}", -1, delta=True)
             finally:
                 if self.gate is not None:
                     self.gate.release(first)
+            status = "ok" if claim_alive else "preempted"
             for v, vctx, v0, v1 in done:
-                self._record_member(v, attempt,
-                                    "ok" if claim_alive else "preempted",
-                                    v0, v1, deps, vctx)
+                self._record_member(v, attempt, status, v0, v1, deps, vctx)
+            for vsp in member_spans:
+                vsp.attrs["status"] = status
+            if sp is not None:
+                sp.attrs.update(status=status, attempts=attempt + 1)
             if crashed_at is None and claim_alive:
-                return
+                return []
             # demote: crashed member + never-started members individually;
             # a dead claim additionally discards-and-retries the completed
             # members (their rewrites overwrite under the writer label)
@@ -466,9 +573,7 @@ class Invoker:
             if crashed_at is not None:
                 retry.append((invs[crashed_at], attempt + 1))
                 retry += [(iv, attempt) for iv in invs[crashed_at + 1:]]
-            for inv, first_attempt in retry:
-                self._execute_one(inv, deps, first_attempt=first_attempt)
-            return
+            return retry
         # batch claim starved after the full max_attempts budget: surface
         # it exactly as the per-invocation path would — a fresh individual
         # retry round would double the budget (and the starvation-detection
@@ -596,6 +701,13 @@ class ThreadPoolInvoker(Invoker):
                     backed.add(i)
                     self.speculations.append(
                         (inv.name, inv.node, node, now - started[i]))
+                    tr = get_tracer()
+                    tr.record(f"speculate/{inv.name}", "invoker", now,
+                              end=now, trace=inv.app, node=node,
+                              parent=tr.anchored(
+                                  ("stage", inv.app, inv.stage)),
+                              kind="speculation", from_node=inv.node,
+                              to_node=node, elapsed=now - started[i])
                     backup = replace(inv, node=node)
                     futs[pool.submit(self._execute_one, backup, deps)] = i
                     copies[i] += 1

@@ -56,6 +56,8 @@ class StageMetrics:
     ok: int = 0
     preempted: int = 0
     crashed: int = 0
+    starved: int = 0               # retry budget exhausted, no slot committed
+    error: int = 0                 # function body / hook raised
     seconds: float = 0.0
     store_seconds: float = 0.0     # time against the store (transfer)
     compute_seconds: float = 0.0   # seconds - store_seconds, per record
@@ -78,6 +80,17 @@ class MetricsSink:
         with self._lock:
             return [r for r in self.records if r.app == app]
 
+    def clear(self, app: str | None = None) -> int:
+        """Drop records (one app's, or all) — the compaction hook that keeps
+        a long-running/service-mode sink bounded. Returns the number
+        dropped. Note that ``replay_into`` only covers records still held.
+        """
+        with self._lock:
+            before = len(self.records)
+            self.records = [] if app is None \
+                else [r for r in self.records if r.app != app]
+            return before - len(self.records)
+
     # -- aggregation -----------------------------------------------------------
 
     def by_stage(self, app: str | None = None) -> dict[str, StageMetrics]:
@@ -92,6 +105,8 @@ class MetricsSink:
             m.ok += r.status == "ok"
             m.preempted += r.status == "preempted"
             m.crashed += r.status == "crashed"
+            m.starved += r.status == "starved"
+            m.error += r.status == "error"
             m.seconds += r.seconds
             m.store_seconds += r.store_seconds
             m.compute_seconds += r.compute_seconds
@@ -131,16 +146,43 @@ class MetricsSink:
             out[f"{name}.bytes_out"] = m.bytes_out
             out[f"{name}.preempted"] = m.preempted
             out[f"{name}.crashed"] = m.crashed
+            out[f"{name}.starved"] = m.starved
+            out[f"{name}.error"] = m.error
         return out
 
     def format_table(self, app: str) -> str:
-        """Per-stage invocation/bytes dashboard (printed by the examples)."""
-        lines = [f"{'stage':16s} {'inv':>4s} {'pre':>4s} {'seconds':>9s} "
+        """Per-stage invocation/bytes dashboard (printed by the examples).
+
+        Rows are sorted by each stage's first invocation start — the table
+        reads in execution order, not dict-insertion order — and a TOTAL
+        row closes it off.
+        """
+        lines = [f"{'stage':16s} {'inv':>4s} {'pre':>4s} {'stv':>4s} "
+                 f"{'err':>4s} {'seconds':>9s} "
                  f"{'store_s':>9s} {'bytes_in':>10s} {'bytes_out':>10s}"]
-        for name, m in self.by_stage(app).items():
+        stages = self.by_stage(app)
+        spans = self.stage_spans(app)
+        total = StageMetrics()
+        for name in sorted(stages,
+                           key=lambda s: spans.get(s, (float("inf"), 0))[0]):
+            m = stages[name]
             lines.append(f"{name:16s} {m.invocations:4d} {m.preempted:4d} "
+                         f"{m.starved:4d} {m.error:4d} "
                          f"{m.seconds:9.4f} {m.store_seconds:9.4f} "
                          f"{m.bytes_in:10d} {m.bytes_out:10d}")
+            total.invocations += m.invocations
+            total.preempted += m.preempted
+            total.starved += m.starved
+            total.error += m.error
+            total.seconds += m.seconds
+            total.store_seconds += m.store_seconds
+            total.bytes_in += m.bytes_in
+            total.bytes_out += m.bytes_out
+        m = total
+        lines.append(f"{'TOTAL':16s} {m.invocations:4d} {m.preempted:4d} "
+                     f"{m.starved:4d} {m.error:4d} "
+                     f"{m.seconds:9.4f} {m.store_seconds:9.4f} "
+                     f"{m.bytes_in:10d} {m.bytes_out:10d}")
         return "\n".join(lines)
 
     # -- trace replay into the simulator ---------------------------------------

@@ -31,6 +31,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any
 
+from repro.obs.tracer import get_tracer
 from repro.runtime.invoker import Invocation, SlotGate
 
 POLICIES = ("fifo", "priority", "fair_share")
@@ -84,6 +85,7 @@ class QueryResult:
     finished: float = 0.0
     decisions: list = field(default_factory=list)   # (stage, Decision) seq
     recoveries: list = field(default_factory=list)  # RecoveryEvents healed
+    stages: dict = field(default_factory=dict)      # {stage: StageMetrics}
 
     @property
     def ok(self) -> bool:
@@ -215,13 +217,18 @@ class QueryScheduler:
     def __init__(self, runtime, policy: str = "fair_share",
                  max_concurrent: int | None = None,
                  gate_timeout: float = 60.0, release_stores: bool = False,
-                 recovery="lineage", max_recoveries: int = 8):
+                 recovery="lineage", max_recoveries: int = 8,
+                 compact_metrics: bool = False):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; pick from {POLICIES}")
         self.runtime = runtime
         self.policy = policy
         self.max_concurrent = max_concurrent
         self.release_stores = release_stores
+        # service-mode compaction: snapshot each query's per-stage metrics
+        # into its QueryResult, then drop the raw records from the shared
+        # sink so a long workload mix stays bounded
+        self.compact_metrics = compact_metrics
         # failure-handling policy shared by every admitted query: lineage
         # recompute (default), whole-query rerun, or a recovery DecisionNode
         self.recovery = recovery
@@ -295,6 +302,19 @@ class QueryScheduler:
         if self.gate is not None:
             self.gate.register(job.app, job.fair_weight())
         res.started = time.monotonic()
+        # query root span: every stage/invocation/store span of this app
+        # parents (transitively) to it via the ("query", app) anchor; the
+        # admission wait (submit -> driver start) is recorded retroactively
+        tr = get_tracer()
+        root = tr.start(f"query/{job.app}", "scheduler", trace=job.app,
+                        parent=None, policy=self.policy,
+                        priority=job.priority)
+        tr.anchor(("query", job.app), root)
+        admit_wait = res.started - res.submitted
+        if admit_wait > 1e-4:
+            now = time.perf_counter()
+            tr.record("admission_wait", "wait", now - admit_wait, end=now,
+                      trace=job.app, parent=root, policy=self.policy)
         try:
             plan, pc = prepare_query_plan(
                 self.runtime, job.fact, job.dim, strategy, app=job.app,
@@ -311,6 +331,11 @@ class QueryScheduler:
             res.recoveries = [ev for ev in self.runtime.recoveries
                               if ev.app == job.app]
             res.finished = time.monotonic()
+            res.stages = self.runtime.metrics.by_stage(job.app)
+            if self.compact_metrics:
+                self.runtime.metrics.clear(job.app)
+            tr.release_anchor(("query", job.app))
+            tr.end(root, status="error" if res.error is not None else "ok")
             if self.gate is not None:
                 self.gate.unregister(job.app)
             if job.quota is not None:

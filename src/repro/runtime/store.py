@@ -21,6 +21,7 @@ from dataclasses import dataclass
 from typing import Mapping, Sequence
 
 from repro.core.decisions import DataDist, partition_skew
+from repro.obs.tracer import get_tracer
 
 
 @dataclass
@@ -213,6 +214,7 @@ class ShuffleStore:
         self.app_bytes[app] = self.app_bytes.get(app, 0) + nbytes
         self.peak_bytes[app] = max(self.peak_bytes.get(app, 0),
                                    self.app_bytes[app])
+        get_tracer().count(f"store_bytes/{app}", self.app_bytes[app])
 
     def put(self, app: str, stage: str, partition: int, table, node: int,
             writer: str = "") -> int:
@@ -220,12 +222,17 @@ class ShuffleStore:
 
         Returns the bytes written.
         """
+        tr = get_tracer()
+        t0 = time.perf_counter() if tr.enabled else 0.0
         nbytes, rows = int(table.nbytes), int(table.num_rows)
         if self.disaggregated and self.net_bw and writer != "seed":
             time.sleep(nbytes / self.net_bw)
         with self._cond:
             self._put_locked(app, stage, partition, table, node, writer,
                              nbytes, rows)
+        if tr.enabled:
+            tr.record(f"put/{stage}", "store", t0, trace=app, node=node,
+                      partition=partition, bytes=nbytes)
         return nbytes
 
     def put_many(self, app: str, stage: str, tables: Mapping[int, object],
@@ -240,6 +247,8 @@ class ShuffleStore:
         disaggregated transfer charge is one sleep for the *total* bytes
         (one flow, not P serialized ones). Returns total bytes written.
         """
+        tr = get_tracer()
+        t0 = time.perf_counter() if tr.enabled else 0.0
         sized = [(int(p), t, int(t.nbytes), int(t.num_rows))
                  for p, t in sorted(tables.items())]
         total = sum(nb for _, _, nb, _ in sized)
@@ -249,6 +258,9 @@ class ShuffleStore:
             for partition, table, nbytes, rows in sized:
                 self._put_locked(app, stage, partition, table, node, writer,
                                  nbytes, rows)
+        if tr.enabled:
+            tr.record(f"put_many/{stage}", "store", t0, trace=app, node=node,
+                      partitions=len(sized), bytes=total)
         return total
 
     def ingest(self, app: str, stage: str, partitions,
@@ -279,6 +291,24 @@ class ShuffleStore:
         traffic the simulator's NIC model prices. Returns None if absent;
         raises ``StageLostError`` if the partition was written and then
         evicted/killed (the reader must never see silently-missing data)."""
+        tr = get_tracer()
+        if not tr.enabled:
+            return self._get_impl(app, stage, partition, node, account)
+        t0 = time.perf_counter()
+        try:
+            t = self._get_impl(app, stage, partition, node, account)
+        except StageLostError:
+            tr.record(f"get/{stage}", "store", t0, trace=app, node=node,
+                      partition=partition, status="lost")
+            raise
+        tr.record(f"get/{stage}", "store", t0, trace=app, node=node,
+                  partition=partition,
+                  bytes=int(t.nbytes) if t is not None else 0,
+                  status="ok" if t is not None else "miss")
+        return t
+
+    def _get_impl(self, app: str, stage: str, partition: int, node: int,
+                  account: bool = True):
         remote = 0
         with self._lock:
             if self.injector is not None:
@@ -422,6 +452,7 @@ class ShuffleStore:
                 self._sealed.pop(key, None)
             if freed:
                 self.app_bytes[app] = self.app_bytes.get(app, 0) - freed
+                get_tracer().count(f"store_bytes/{app}", self.app_bytes[app])
                 self._cond.notify_all()     # wake quota-blocked writers
             return freed
 
@@ -462,6 +493,7 @@ class ShuffleStore:
                     freed += b.nbytes
             if freed:
                 self.app_bytes[app] = self.app_bytes.get(app, 0) - freed
+                get_tracer().count(f"store_bytes/{app}", self.app_bytes[app])
                 self._cond.notify_all()     # wake quota-blocked writers
             return freed
 

@@ -213,6 +213,10 @@ def test_consolidated_sequence_matches_materialized_plan():
 
 
 def test_simulator_and_runtime_share_identical_decision_sequences():
+    from repro.obs import get_audit_log
+
+    audit = get_audit_log()
+    audit.clear()
     fd, dd, ref = make_dist_tables()
     wf = build_query_workflow(QueryStrategy("dynamic_fig6"))
 
@@ -221,6 +225,10 @@ def test_simulator_and_runtime_share_identical_decision_sequences():
                                    gc=gc_rt, workflow=wf)
     np.testing.assert_allclose(got, ref, atol=1e-3)
     seq_runtime = list(wf.last_run.sequence)
+    nodes = [s for s, _ in seq_runtime]
+    funcs_runtime = [(s, d.func) for s, d in seq_runtime]
+    # the audit log recorded the runtime plane's bindings, in order
+    assert audit.sequence("query", nodes=nodes) == funcs_runtime
 
     gc_sim, sim = make_cluster(4)
     pc = PrivateController("query", gc_sim, priority=10)
@@ -234,6 +242,10 @@ def test_simulator_and_runtime_share_identical_decision_sequences():
     assert seq_runtime == seq_sim
     # both runs flowed through the same nodes (bounded shared history)
     assert len(wf.stages["join"].node.history) == 2
+    # the audit stream now holds both planes' bindings back to back, and
+    # the runtime plane's audited sequence equals the simulator's
+    assert audit.sequence("query", nodes=nodes) == \
+        funcs_runtime + [(s, d.func) for s, d in seq_sim]
 
 
 def test_estimated_scan_output_matches_observed_store_distribution():

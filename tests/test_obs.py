@@ -1,0 +1,320 @@
+"""Observability: trace integrity, Chrome export round-trip, exact
+critical paths on synthetic span DAGs, decision-audit diffing, metrics
+compaction and the starved/error dashboard columns."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analytics import (
+    QueryStrategy,
+    Table,
+    execute_query_runtime,
+    reference_query_numpy,
+    synth_table,
+)
+from repro.analytics.planner import build_query_workflow
+from repro.analytics.table import distribute
+from repro.core.controllers import GlobalController
+from repro.obs import (
+    Span,
+    Tracer,
+    critical_path,
+    get_audit_log,
+    get_tracer,
+    set_tracer,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
+from repro.runtime import MetricsSink, QueryJob, QueryScheduler, Runtime
+from repro.runtime.metrics import InvocationRecord
+
+
+def make_dist_tables(rows=4096, keyspace=2048, dim_rows=512,
+                     fact_nodes=4, dim_nodes=2, seed=1):
+    fact = synth_table("f", rows, keyspace, seed=seed)
+    dimc = synth_table("d", dim_rows, keyspace, seed=seed + 1,
+                       unique_keys=True)
+    dim = Table({**dimc.columns,
+                 "cat": jnp.arange(dim_rows, dtype=jnp.int32) % 64})
+    ref = reference_query_numpy(fact, dim)
+    return (distribute(fact, range(fact_nodes), "A"),
+            distribute(dim, range(dim_nodes), "B"), ref)
+
+
+@pytest.fixture(autouse=True)
+def fresh_obs():
+    get_tracer().clear()
+    get_audit_log().clear()
+    yield
+    get_tracer().clear()
+    get_audit_log().clear()
+
+
+# -- tracer mechanics ------------------------------------------------------------
+
+
+def test_span_nesting_and_intra_thread_parenting():
+    tr = Tracer()
+    with tr.span("outer", "executor", trace="t") as outer:
+        with tr.span("inner", "store") as inner:
+            assert inner.parent_id == outer.span_id
+            assert inner.trace == "t"          # inherited from parent
+    spans = tr.spans("t")
+    assert [s.name for s in spans] == ["inner", "outer"]
+    # nesting is temporal containment
+    by = {s.name: s for s in spans}
+    assert by["outer"].start <= by["inner"].start
+    assert by["inner"].end <= by["outer"].end
+
+
+def test_anchors_give_cross_thread_parents():
+    tr = Tracer()
+    root = tr.start("query/x", "scheduler", trace="x", parent=None)
+    tr.anchor(("query", "x"), root)
+    child = tr.start("stage/s", "executor", trace="x",
+                     parent=tr.anchored(("query", "x")))
+    assert child.parent_id == root.span_id
+    tr.release_anchor(("query", "x"))
+    assert tr.anchored(("query", "x")) is None
+    tr.end(child)
+    tr.end(root)
+
+
+def test_ring_buffer_bounds_and_disabled_tracer():
+    tr = Tracer(capacity=4)
+    for i in range(7):
+        with tr.span(f"s{i}", "store", trace="t"):
+            pass
+    assert len(tr.spans()) == 4
+    assert [s.name for s in tr.spans()] == ["s3", "s4", "s5", "s6"]
+
+    off = Tracer(enabled=False)
+    with off.span("x", "store", trace="t") as sp:
+        assert sp is None
+    off.count("store_bytes/t", 5)
+    assert off.spans() == [] and off.counters() == []
+    assert off.start("x", "store") is None
+    assert off.record("x", "store", 0.0) is None
+
+
+def test_all_parents_live_in_buffer_after_real_query():
+    fd, dd, _ = make_dist_tables()
+    # static_merge shuffles both sides, so the kernel dispatch layer
+    # (grouping_indices) fires inside the shuffle_write function bodies
+    execute_query_runtime(fd, dd, QueryStrategy("static_merge"))
+    spans = get_tracer().spans("query")
+    assert spans, "a real query must leave spans"
+    ids = {s.span_id for s in spans}
+    dangling = [s for s in spans if s.parent_id is not None
+                and s.parent_id not in ids]
+    assert not dangling, [s.name for s in dangling]
+    cats = {s.cat for s in spans}
+    assert {"executor", "invoker", "store", "kernel"} <= cats
+    # one non-store root: the executor's own query span (seed-time store
+    # puts happen before any query root exists and stay roots)
+    roots = [s for s in spans if s.parent_id is None and s.cat != "store"]
+    assert [s.name for s in roots] == ["query/query"]
+
+
+def test_chrome_trace_round_trip_with_scheduler():
+    fd, dd, ref = make_dist_tables(rows=2048, dim_rows=256,
+                                   fact_nodes=2, dim_nodes=1)
+    gc = GlobalController({0: 4, 1: 4})
+    rt = Runtime(gc, invoker="threads")
+    sched = QueryScheduler(rt, policy="fair_share")
+    sched.submit(QueryJob("obs_q", fd, dd, "static_hash", priority=3))
+    res = sched.run()["obs_q"]
+    assert res.ok, res.error
+    np.testing.assert_allclose(res.sums, ref, atol=1e-3)
+
+    trace = to_chrome_trace(get_tracer(), app="obs_q")
+    info = validate_chrome_trace(json.dumps(trace))   # JSON round trip
+    assert info["events"] > 0
+    assert {"scheduler", "executor", "invoker", "store"} <= set(info["cats"])
+    assert "store_bytes/obs_q" in info["counter_tracks"]
+    assert any(t.startswith("slots/node") for t in info["counter_tracks"])
+    # node processes + the control-plane process
+    assert 1 in info["pids"] and any(p >= 10 for p in info["pids"])
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"no": "traceEvents"})
+    with pytest.raises(ValueError):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "pid": 1, "ts": -1, "dur": 1,
+                              "name": "x", "tid": 0}]})
+
+
+# -- critical path on synthetic span DAGs ----------------------------------------
+
+
+def _stage(sid, name, deps, t0, t1):
+    return Span(sid, "app", f"stage/{name}", "executor", t0, end=t1,
+                attrs={"stage": name, "deps": list(deps)})
+
+
+def _inv(sid, stage, t0, t1, node=0):
+    return Span(sid, "app", f"app/{stage}/0", "invoker", t0, end=t1,
+                node=node, attrs={"kind": "invocation", "stage": stage})
+
+
+def test_critical_path_exact_on_synthetic_dag():
+    # A (0-10) -> B (12-20); a non-bounding sibling A2 finishes earlier
+    spans = [
+        _stage(1, "A", (), 0.0, 10.0),
+        _stage(2, "B", ("A",), 10.0, 20.0),
+        _inv(3, "A", 0.0, 10.0),
+        Span(4, "app", "app/A/1", "invoker", 0.0, end=4.0, node=1,
+             attrs={"kind": "invocation", "stage": "A"}),
+        _inv(5, "B", 12.0, 20.0, node=1),
+        # store read inside the bounding B invocation: 3s transfer
+        Span(6, "app", "get/A", "store", 13.0, end=16.0, parent_id=5),
+    ]
+    cp = critical_path(spans, app="app")
+    assert [s.stage for s in cp.steps] == ["A", "B"]
+    assert cp.steps[0].name == "app/A/0"          # max-end pred, not A/1
+    assert cp.makespan == pytest.approx(20.0)
+    assert cp.steps[1].queue == pytest.approx(2.0)   # 12 - 10 gap
+    assert cp.steps[1].store == pytest.approx(3.0)
+    assert cp.steps[1].compute == pytest.approx(5.0)
+    assert cp.breakdown["compute"] == pytest.approx(15.0)
+    assert cp.dominant == "compute"
+
+
+def test_critical_path_slot_wait_bound():
+    spans = [
+        _stage(1, "A", (), 0.0, 30.0),
+        _inv(2, "A", 0.0, 30.0),
+        Span(3, "app", "slot_wait", "wait", 1.0, end=25.0, parent_id=2),
+    ]
+    cp = critical_path(spans, app="app")
+    assert cp.dominant == "slot_wait"
+    assert cp.breakdown["slot_wait"] == pytest.approx(24.0)
+    assert cp.breakdown["compute"] == pytest.approx(6.0)
+
+
+def test_critical_path_store_bound_and_batch_wait_inheritance():
+    spans = [
+        _stage(1, "A", (), 0.0, 20.0),
+        # batch span owns the claim wait; its member owns the store time
+        Span(2, "app", "batch/A@0", "invoker", 0.0, end=20.0, node=0,
+             attrs={"kind": "batch", "stage": "A"}),
+        Span(3, "app", "slot_wait", "wait", 0.0, end=2.0, parent_id=2),
+        Span(4, "app", "app/A/0", "invoker", 2.0, end=20.0, node=0,
+             parent_id=2, attrs={"kind": "invocation", "stage": "A"}),
+        Span(5, "app", "put/out", "store", 5.0, end=17.0, parent_id=4),
+    ]
+    cp = critical_path(spans, app="app")
+    assert cp.dominant == "store"
+    assert cp.breakdown["store"] == pytest.approx(12.0)
+    assert cp.breakdown["slot_wait"] == pytest.approx(2.0)  # inherited
+    assert cp.breakdown["compute"] == pytest.approx(4.0)
+
+
+def test_critical_path_none_without_invocations():
+    assert critical_path([], app="x") is None
+    assert critical_path([_stage(1, "A", (), 0.0, 1.0)], app="app") is None
+
+
+# -- decision audit --------------------------------------------------------------
+
+
+def test_audit_entries_match_workflow_sequence():
+    fd, dd, _ = make_dist_tables(rows=2048, dim_rows=256, seed=3)
+    wf = build_query_workflow(QueryStrategy("dynamic"))
+    execute_query_runtime(fd, dd, QueryStrategy("dynamic"), workflow=wf)
+    run = wf.last_run
+    want = [(stage, d.func) for stage, d in run.sequence]
+    got = get_audit_log().sequence("query", nodes=[s for s, _ in want])
+    assert got == want
+    # the snapshot carries candidates + the upstream bindings
+    entries = get_audit_log().entries("query")
+    assert all(e.candidates for e in entries
+               if e.node in {s for s, _ in want})
+    join = next(e for e in entries if e.node == "join")
+    assert ("scan", "scan_filter") in join.prior
+    assert "A_scanned" in join.data_dist     # observed post-scan dist
+    assert join.format()                     # human-readable, non-empty
+
+
+def test_audit_log_bounded_and_clearable():
+    log = get_audit_log()
+    fd, dd, _ = make_dist_tables(rows=2048, dim_rows=256, seed=4)
+    execute_query_runtime(fd, dd, QueryStrategy("static_hash"))
+    assert log.entries("query")
+    log.clear()
+    assert log.entries() == []
+
+
+# -- metrics satellites ----------------------------------------------------------
+
+
+def _rec(stage, status, t0=0.0, t1=1.0, name=None):
+    return InvocationRecord(name or f"a/{stage}/0", "a", stage, "f", 0, 0,
+                            status, t0, t1)
+
+
+def test_stage_metrics_counts_starved_and_error():
+    sink = MetricsSink()
+    sink.record(_rec("s", "ok"))
+    sink.record(_rec("s", "starved", name="a/s/1"))
+    sink.record(_rec("s", "error", name="a/s/2"))
+    m = sink.by_stage("a")["s"]
+    assert (m.ok, m.starved, m.error) == (1, 1, 1)
+    fb = sink.profile_feedback("a")
+    assert fb["s.starved"] == 1 and fb["s.error"] == 1
+
+
+def test_format_table_sorted_by_first_start_with_totals():
+    sink = MetricsSink()
+    sink.record(_rec("late", "ok", t0=10.0, t1=11.0))
+    sink.record(_rec("early", "ok", t0=0.0, t1=2.0))
+    sink.record(_rec("early", "starved", t0=1.0, t1=1.0, name="a/early/1"))
+    table = sink.format_table("a")
+    lines = table.splitlines()
+    order = [ln.split()[0] for ln in lines[1:]]
+    assert order == ["early", "late", "TOTAL"]
+    total = lines[-1].split()
+    assert total[1] == "3"                   # invocations
+    assert total[3] == "1"                   # starved column
+    assert "stv" in lines[0] and "err" in lines[0]
+
+
+def test_metrics_clear_per_app_and_scheduler_compaction():
+    sink = MetricsSink()
+    sink.record(_rec("s", "ok"))
+    sink.record(InvocationRecord("b/s/0", "b", "s", "f", 0, 0, "ok", 0, 1))
+    assert sink.clear(app="a") == 1
+    assert [r.app for r in sink.records] == ["b"]
+    assert sink.clear() == 1 and sink.records == []
+
+    fd, dd, ref = make_dist_tables(rows=2048, dim_rows=256, seed=6,
+                                   fact_nodes=2, dim_nodes=1)
+    gc = GlobalController({0: 4, 1: 4})
+    rt = Runtime(gc, invoker="threads")
+    sched = QueryScheduler(rt, policy="fair_share", compact_metrics=True)
+    sched.submit(QueryJob("cq", fd, dd, "static_hash"))
+    res = sched.run()["cq"]
+    assert res.ok, res.error
+    np.testing.assert_allclose(res.sums, ref, atol=1e-3)
+    # raw records compacted away, per-stage snapshot preserved
+    assert rt.metrics.for_app("cq") == []
+    assert res.stages and res.stages["final_agg"].ok == 1
+
+
+# -- overhead / disabled end-to-end ----------------------------------------------
+
+
+def test_query_runs_clean_with_tracer_disabled():
+    prev = set_tracer(Tracer(enabled=False))
+    try:
+        fd, dd, ref = make_dist_tables(rows=2048, dim_rows=256, seed=8)
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"))
+        np.testing.assert_allclose(got, ref, atol=1e-3)
+        assert get_tracer().spans() == []
+    finally:
+        set_tracer(prev)

@@ -271,6 +271,10 @@ def test_concurrent_mix_sim_and_runtime_bind_identical_decisions(seed):
     per-query decision sequence on both planes — concurrency (slot
     contention, gate waits, interleaved store traffic) must not leak into
     the decision workflows."""
+    from repro.obs import get_audit_log
+
+    audit = get_audit_log()
+    audit.clear()
     rng = random.Random(seed)
     n_queries = rng.randint(2, 4)
     jobs = []
@@ -307,6 +311,12 @@ def test_concurrent_mix_sim_and_runtime_bind_identical_decisions(seed):
         sim_seq = list(wf.last_run.sequence)
         assert sim_seq == runtime_seqs[app], \
             f"{app} [{strat}]: decision sequences diverged across planes"
+        # audit parity: the per-app audit stream holds the concurrent
+        # runtime bindings followed by the sim bindings — both must equal
+        # the simulator decision sequence, despite interleaved execution
+        funcs = [(s, d.func) for s, d in sim_seq]
+        assert audit.sequence(app, nodes=[s for s, _ in sim_seq]) == \
+            funcs + funcs, f"{app} [{strat}]: audit log diverged"
     out = sim.run()
     for app, *_ in jobs:
         assert out["completion"][app] > 0
