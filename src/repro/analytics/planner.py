@@ -1,8 +1,8 @@
 """Workflow-driven adaptive query planner (paper Fig. 5 step 4, Fig. 6).
 
-One ``DecisionWorkflow`` per query carries four per-phase decision nodes —
-``scan``, ``join``, ``exchange``, ``aggregate`` — and drives *both* data
-planes. ``AdaptiveQueryPlan`` is the runtime side: the DAG executor calls it
+One ``DecisionWorkflow`` per query carries five per-phase decision nodes —
+``scan``, ``join``, ``exchange``, ``aggregate``, ``pipeline`` — and drives
+*both* data planes. ``AdaptiveQueryPlan`` is the runtime side: the DAG executor calls it
 back as physical stages complete, it folds the observed metrics and the
 **post-filter** scan output distribution into the workflow context, binds the
 next decisions, and emits the newly materialized stages — a mid-query
@@ -136,14 +136,48 @@ def aggregate_decision(ctx: DecisionContext) -> Decision:
     return Decision("two_phase", join_fanout(join), join.schedule)
 
 
+# per-bucket bytes under which the fused partition+probe kernel's build
+# side comfortably fits VMEM (one-hot probe over the whole bucket)
+FUSED_BUCKET_BYTES = 4 << 20
+PREFETCH_DEPTH = 2            # in-flight partition fetches per join side
+
+
+def pipeline_decision(ctx: DecisionContext) -> Decision:
+    """Shuffle→join coupling: stage ``barrier`` vs partition-``pipelined``
+    consumption vs the ``fused`` partition+probe kernel.
+
+    A control-plane choice, not a data-plane flag: it binds from the
+    *observed* post-scan volume (bucket size = both sides over the join
+    fan-out) and the controller's free-slot view. Small buckets take the
+    fused single-dispatch kernel (its build side must fit VMEM); otherwise
+    free slots make partition-granularity pipelining worthwhile (consumers
+    can launch while producers still hold slots); a saturated cluster keeps
+    the stage barrier — pipelining would only queue behind producers. The
+    ``scale`` is the per-side prefetch depth (double buffering)."""
+    join = ctx.decisions["join"]
+    dist_a = ctx.data_dist.get("A_scanned", ctx.data_dist["A"])
+    dist_b = ctx.data_dist["B"]
+    n_join = join_fanout(join)
+    bucket = (dist_a.size + dist_b.size) / max(1, n_join)
+    if bucket <= FUSED_BUCKET_BYTES:
+        return Decision("fused", PREFETCH_DEPTH, join.schedule,
+                        extras=(("bucket_bytes", int(bucket)),))
+    if ctx.node_status.free() > 0:
+        return Decision("pipelined", PREFETCH_DEPTH, join.schedule,
+                        extras=(("bucket_bytes", int(bucket)),))
+    return Decision("barrier", 1, join.schedule,
+                    extras=(("bucket_bytes", int(bucket)),))
+
+
 def build_query_workflow(strategy, name: str | None = None,
                          consolidate_threshold: int = 2 << 30,
                          ) -> DecisionWorkflow:
-    """The query's decision workflow (paper Fig. 5): four per-phase nodes.
+    """The query's decision workflow (paper Fig. 5): five per-phase nodes.
 
-    ``join`` is late-bound on the scan stage's feedback; ``exchange`` and
-    ``aggregate`` follow the join *decision* (their physical stages bracket
-    the join stage) but await only the scan feedback.
+    ``join`` is late-bound on the scan stage's feedback; ``exchange``,
+    ``aggregate`` and ``pipeline`` follow the join *decision* (their
+    physical effect brackets the join stage) but await only the scan
+    feedback.
     """
     wf = DecisionWorkflow(name or f"query[{strategy.name}]")
     wf.add(DecisionNode("scan", scan_decision,
@@ -157,6 +191,9 @@ def build_query_workflow(strategy, name: str | None = None,
            depends_on=("join",), await_feedback=("scan",))
     wf.add(DecisionNode("aggregate", aggregate_decision,
                         candidates=("two_phase",)),
+           depends_on=("exchange",), await_feedback=("scan",))
+    wf.add(DecisionNode("pipeline", pipeline_decision,
+                        candidates=("barrier", "pipelined", "fused")),
            depends_on=("exchange",), await_feedback=("scan",))
     return wf
 
@@ -225,10 +262,11 @@ def estimate_scan_output(fact, name: str = "A_scanned",
 
 
 def _inv(app: str, stage: str, i: int, fn: str, node: int, params: dict,
-         priority: int, batchable: bool = False):
+         priority: int, batchable: bool = False, needs: tuple = ()):
     from repro.runtime.invoker import Invocation
     return Invocation(f"{app}/{stage}/{i}", app, stage, i, fn, node,
-                      priority=priority, params=params, batchable=batchable)
+                      priority=priority, params=params, batchable=batchable,
+                      needs=needs)
 
 
 def scan_stages(app: str, fact_layout: Sequence[tuple[int, int]],
@@ -259,7 +297,8 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                 dist_f: DataDist, consolidated: bool = False,
                 num_groups: int = 64, priority: int = 0,
                 exchange: Decision | None = None,
-                aggregate: Decision | None = None) -> list:
+                aggregate: Decision | None = None,
+                pipeline: Decision | None = None) -> list:
     """Materialize the post-scan plan from the bound decisions: the
     ``exchange`` decision picks the pattern (``shuffle`` both sides into the
     join's bucket space vs ``broadcast`` the dim side), the join decision's
@@ -268,11 +307,21 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
     join decision is given (legacy up-front path) the exchange pattern is
     derived from its ``func`` and aggregation co-locates with the join;
     ``consolidated`` then packs the whole tail onto the data-heaviest node
-    (workflow-built consolidated decisions already carry that placement)."""
+    (workflow-built consolidated decisions already carry that placement).
+
+    The ``pipeline`` decision (barrier / pipelined / fused) rides along as
+    a ``plan`` parameter on every join invocation, and every invocation
+    carries ``needs`` — the producer invocations whose commits complete its
+    inputs — so a pipelining executor can launch it at partition
+    granularity. Both are *always* materialized from the bound decision:
+    whether the executor honors them is its own flag, so the emitted plan
+    (and the decision audit) is byte-identical with pipelining on or off.
+    """
     from repro.runtime.executor import RuntimeStage
 
     all_nodes = tuple(sorted({n for _, n in fact_layout} |
                              {n for _, n in dim_layout}))
+    plan_mode = pipeline.func if pipeline is not None else "barrier"
     n_join = join_fanout(decision)
     join_nodes = decision.schedule.place(n_join) or \
         tuple(all_nodes[i % len(all_nodes)] for i in range(n_join))
@@ -289,19 +338,24 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
 
     stages = []
     if pattern == "shuffle":
+        # hash distribution is all-to-all: every join bucket may hold rows
+        # from every writer, so a join's inputs are complete only once ALL
+        # shuffle writers committed
+        writers = tuple([f"{app}/shuffle_fact/{i}" for i, _ in fact_layout] +
+                        [f"{app}/shuffle_dim/{j}" for j, _ in dim_layout])
         stages += [
             RuntimeStage("shuffle_fact", [
                 _inv(app, "shuffle_fact", i, "shuffle_write", node,
                      {"src": "scan_fact", "dst": "fact_buckets",
                       "partition": i, "num_buckets": n_join}, priority,
-                     batchable=True)
+                     batchable=True, needs=(f"{app}/scan_fact/{i}",))
                 for i, node in fact_layout], deps=("scan_fact",),
                 decision="exchange"),
             RuntimeStage("shuffle_dim", [
                 _inv(app, "shuffle_dim", j, "shuffle_write", node,
                      {"src": "scan_dim", "dst": "dim_buckets",
                       "partition": j, "num_buckets": n_join}, priority,
-                     batchable=True)
+                     batchable=True, needs=(f"{app}/scan_dim/{j}",))
                 for j, node in dim_layout], deps=("scan_dim",),
                 decision="exchange"),
             RuntimeStage("join", [
@@ -309,18 +363,21 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                      {"fact_stage": "fact_buckets", "fact_partitions": [r],
                       "dim_stage": "dim_buckets", "dim_partitions": [r],
                       "dst": "joined", "partition": r,
-                      "num_groups": num_groups}, priority)
+                      "num_groups": num_groups, "plan": plan_mode},
+                     priority, needs=writers)
                 for r in range(n_join)],
                 deps=("shuffle_fact", "shuffle_dim"),
                 ephemeral_inputs=("fact_buckets", "dim_buckets"),
                 decision="join"),
         ]
     else:
+        bcast = tuple(f"{app}/broadcast_dim/{j}" for j, _ in dim_layout)
         stages += [
             RuntimeStage("broadcast_dim", [
                 _inv(app, "broadcast_dim", j, "broadcast_write", node,
                      {"src": "scan_dim", "dst": "dim_bcast", "partition": j},
-                     priority, batchable=True)
+                     priority, batchable=True,
+                     needs=(f"{app}/scan_dim/{j}",))
                 for j, node in dim_layout], deps=("scan_dim",),
                 decision="exchange"),
             RuntimeStage("join", [
@@ -330,7 +387,11 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                                           if i % n_join == k],
                       "dim_stage": "dim_bcast", "dim_partitions": "all",
                       "dst": "joined", "partition": k,
-                      "num_groups": num_groups}, priority)
+                      "num_groups": num_groups, "plan": plan_mode},
+                     priority,
+                     needs=bcast + tuple(
+                         f"{app}/scan_fact/{i}" for i, _ in fact_layout
+                         if i % n_join == k))
                 for k in range(n_join)],
                 deps=("scan_fact", "broadcast_dim"), decision="join"),
         ]
@@ -339,13 +400,16 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
         RuntimeStage("partial_agg", [
             _inv(app, "partial_agg", k, "partial_aggregate", agg_nodes[k],
                  {"src": "joined", "dst": "partials", "partition": k,
-                  "num_groups": num_groups}, priority, batchable=True)
+                  "num_groups": num_groups}, priority, batchable=True,
+                 needs=(f"{app}/join/{k}",))
             for k in range(n_join)], deps=("join",),
             ephemeral_inputs=("joined",), decision="aggregate"),
         RuntimeStage("final_agg", [
             _inv(app, "final_agg", 0, "final_aggregate", agg_nodes[0],
                  {"src": "partials", "dst": "result",
-                  "num_groups": num_groups}, priority)],
+                  "num_groups": num_groups}, priority,
+                 needs=tuple(f"{app}/partial_agg/{k}"
+                             for k in range(n_join)))],
             deps=("partial_agg",), ephemeral_inputs=("partials",),
             decision="aggregate"),
     ]
@@ -401,13 +465,14 @@ class AdaptiveQueryPlan:
         join_d = self.run.decide("join")
         exchange_d = self.run.decide("exchange")
         aggregate_d = self.run.decide("aggregate")
+        pipeline_d = self.run.decide("pipeline")
         # consolidated join decisions already carry their packed placement,
         # so the materialization is exactly what the sequence records
         return tail_stages(
             self.app, self.fact_layout, self.dim_layout, join_d,
             self.run.ctx.data_dist["A"], num_groups=self.num_groups,
             priority=self.priority, exchange=exchange_d,
-            aggregate=aggregate_d)
+            aggregate=aggregate_d, pipeline=pipeline_d)
 
 
 def stages_for_run(run: WorkflowRun, app: str,
@@ -423,7 +488,8 @@ def stages_for_run(run: WorkflowRun, app: str,
         app, fact_layout, dim_layout, run.decisions["join"],
         run.ctx.data_dist["A"], num_groups=num_groups, priority=priority,
         exchange=run.decisions.get("exchange"),
-        aggregate=run.decisions.get("aggregate"))
+        aggregate=run.decisions.get("aggregate"),
+        pipeline=run.decisions.get("pipeline"))
 
 
 # ---------------------------------------------------------------------------
@@ -468,6 +534,7 @@ def plan_query_with_workflow(sim, pc, fact, dim, strategy,
     decision = run.decide("join")
     run.decide("exchange")
     run.decide("aggregate")
+    run.decide("pipeline")
     consolidated = bool(decision.extra("consolidate", False))
 
     _submit_sim_tasks(sim, app, dist_f, dist_d, scanned, decision,

@@ -216,7 +216,7 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
                           workflow: DecisionWorkflow | None = None,
                           barrier: bool = False, recovery="lineage",
                           max_recoveries: int = 8, batching: bool = True,
-                          map_split: int = 1):
+                          map_split: int = 1, pipeline: bool = False):
     """Run the TPC-DS-like sub-query end-to-end on the serverless runtime.
 
     One decision workflow drives the whole query: the scan decision binds
@@ -231,7 +231,11 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
     ``batching`` (only consulted when the runtime is built here) toggles
     the invoker's coalescing of batchable map invocations — the control
     plane sees identical decisions and metrics either way (tested).
-    Returns ``(group_sums, runtime)``.
+    ``pipeline=True`` lets the executor honor the workflow's bound
+    ``pipeline`` decision (partition-granularity launch + prefetch + fused
+    probe); off, the same decision is still bound and audited but the
+    stage barrier runs — decisions, record counts and results are
+    identical either way (tested). Returns ``(group_sums, runtime)``.
     """
     from repro.runtime.executor import Runtime
 
@@ -247,7 +251,7 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
         map_split=map_split)
     runtime.execute(plan.initial_stages(), pc=pc, planner=plan,
                     barrier=barrier, recovery=recovery,
-                    max_recoveries=max_recoveries)
+                    max_recoveries=max_recoveries, pipeline=pipeline)
     return runtime.result(app), runtime
 
 

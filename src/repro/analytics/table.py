@@ -75,8 +75,17 @@ class Table:
             return mat() if mat is not None else p
         if all(hasattr(p, "columns") for p in parts):
             names = list(parts[0].columns)
-            return Table({k: jnp.concatenate([p.columns[k] for p in parts])
-                          for k in names})
+            cols = {}
+            for k in names:
+                vals = [p.columns[k] for p in parts]
+                if all(isinstance(v, np.ndarray) for v in vals):
+                    # host-resident parts (the shuffle store's bucket views)
+                    # concatenate as one memcpy — no XLA program per distinct
+                    # (part-count, shapes) combination
+                    cols[k] = np.concatenate(vals)
+                else:
+                    cols[k] = jnp.concatenate(vals)
+            return Table(cols)
         out = parts[0]
         for p in parts[1:]:
             out = out.concat(p)

@@ -17,6 +17,7 @@ no-per-partition-recompilation property the CI smoke benchmark asserts.
 
 from __future__ import annotations
 
+import threading
 from functools import partial
 
 import jax
@@ -27,6 +28,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.partition import (
+    fused_probe as _fused_probe,
     partition_histogram as _hist,
     partition_scatter as _scatter,
 )
@@ -129,6 +131,31 @@ def _pad_len(n: int) -> int:
 # span whether this call paid a fresh trace/compile or hit the jit cache
 _SHAPE_CLASSES: set[tuple[int, int]] = set()
 
+# per-thread padded-vs-actual row tally for every shape-class dispatch; the
+# invoker snapshots it around each function body so padding waste lands on
+# the invocation record (-> profile_feedback "padding_overhead") instead of
+# needing a re-profile to spot a probe-side blowup
+_padding_tls = threading.local()
+
+
+def _note_padding(rows: int, padded: int) -> None:
+    c = getattr(_padding_tls, "counts", None)
+    if c is None:
+        c = _padding_tls.counts = [0, 0]
+    c[0] += int(rows)
+    c[1] += int(padded)
+
+
+def padding_counters() -> tuple[int, int]:
+    """``(actual_rows, padded_rows)`` dispatched through shape-class-padded
+    kernel entry points by this thread since ``reset_padding_counters``."""
+    c = getattr(_padding_tls, "counts", None)
+    return (c[0], c[1]) if c else (0, 0)
+
+
+def reset_padding_counters() -> None:
+    _padding_tls.counts = [0, 0]
+
 
 @partial(jax.jit, static_argnames=("num_partitions",))
 def _grouping_padded(pids_padded: jax.Array, num_partitions: int):
@@ -168,6 +195,7 @@ def grouping_indices(part_ids, num_partitions: int,
         return (jnp.zeros((0,), jnp.int32),
                 jnp.zeros((num_partitions + 1,), jnp.int32))
     n_pad = _pad_len(n)
+    _note_padding(n, n_pad)
     shape_class = (n_pad, num_partitions)
     fresh = shape_class not in _SHAPE_CLASSES
     _SHAPE_CLASSES.add(shape_class)
@@ -282,6 +310,80 @@ def hash_join_indices(probe_keys: jax.Array, build_keys: jax.Array,
     found0 = jnp.zeros(probe_keys.shape, bool)
     idx, found = jax.lax.fori_loop(0, max_probes, probe, (idx0, found0))
     return idx, found
+
+
+# -- fused partition+probe (the pipelined join's bucket primitive) -------------
+
+# build sides at or below this padded row count keep the kernel's
+# (probe-block, build) one-hot comfortably inside VMEM (~2 MB of int32 at
+# 128 x 4096); larger buckets take the jitted sorted-search fallback
+FUSED_VMEM_ROWS = 4096
+
+
+@partial(jax.jit, static_argnames=("num_groups",))
+def _fused_probe_padded(pk, v0, v1, bk, bc, bv, num_groups: int):
+    """Jitted fallback over shape-class-padded buckets: sort the build side
+    once, binary-search every probe key, mask invalid (padding) build rows
+    through the sort so a sentinel collision can never fake a match."""
+    big = jnp.int32(2**31 - 1)
+    keys = jnp.where(bv != 0, bk, big)     # park padding rows at the end
+    order = jnp.argsort(keys)
+    skeys = keys[order]
+    scat = bc[order]
+    svalid = bv[order]
+    pos = jnp.clip(jnp.searchsorted(skeys, pk), 0, skeys.shape[0] - 1)
+    found = jnp.logical_and(skeys[pos] == pk, svalid[pos] != 0)
+    cat = jnp.where(found, scat[pos], 0)
+    weight = jnp.where(found, v0 * v1, jnp.float32(0.0))
+    return cat % num_groups, weight
+
+
+def fused_probe_groups(probe_keys, v0, v1, build_keys, build_cat,
+                       num_groups: int, force_kernel: bool = False):
+    """Fused partition+probe+weight for one shuffled join bucket.
+
+    Collapses the bucket's sort-merge join, the found-mask ``where`` and
+    the group projection into ONE dispatch: returns ``(group, weight)``
+    numpy columns aligned with probe rows, where non-matching probe rows
+    carry group 0 / weight 0 — bit-identical to the unfused
+    ``join -> where(found) -> cat % G`` pipeline (build keys unique per the
+    join contract). Probe and build sides are padded to power-of-two shape
+    classes; the Pallas path runs when the build side fits the VMEM budget
+    (``FUSED_VMEM_ROWS``), the jitted sorted-search body elsewhere.
+    """
+    from repro.obs.tracer import get_tracer
+
+    n = int(probe_keys.shape[0])
+    m = int(build_keys.shape[0])
+    if n == 0 or m == 0:
+        return (np.zeros((n,), np.int32), np.zeros((n,), np.float32))
+    n_pad, m_pad = _pad_len(n), _pad_len(m)
+    _note_padding(n + m, n_pad + m_pad)
+    kernel_ok = (on_tpu() or force_kernel) and m_pad <= FUSED_VMEM_ROWS
+    with get_tracer().span("kernel/fused_probe", "kernel", rows=n,
+                           build_rows=m, shape_class=n_pad,
+                           path="pallas" if kernel_ok else "jit"):
+        pk = jnp.asarray(probe_keys, jnp.int32)
+        v0 = jnp.asarray(v0, jnp.float32)
+        v1 = jnp.asarray(v1, jnp.float32)
+        if n_pad != n:
+            pk = jnp.concatenate([pk, jnp.zeros((n_pad - n,), jnp.int32)])
+            v0 = jnp.concatenate([v0, jnp.zeros((n_pad - n,), jnp.float32)])
+            v1 = jnp.concatenate([v1, jnp.zeros((n_pad - n,), jnp.float32)])
+        bk = jnp.asarray(build_keys, jnp.int32)
+        bc = jnp.asarray(build_cat, jnp.int32)
+        bv = jnp.ones((m,), jnp.int32)
+        if m_pad != m:
+            bk = jnp.concatenate([bk, jnp.zeros((m_pad - m,), jnp.int32)])
+            bc = jnp.concatenate([bc, jnp.zeros((m_pad - m,), jnp.int32)])
+            bv = jnp.concatenate([bv, jnp.zeros((m_pad - m,), jnp.int32)])
+        if kernel_ok:
+            grp, wgt = _fused_probe(pk, v0, v1, bk, bc, bv, num_groups,
+                                    interpret=not on_tpu())
+        else:
+            grp, wgt = _fused_probe_padded(pk, v0, v1, bk, bc, bv,
+                                           num_groups)
+        return np.asarray(grp)[:n], np.asarray(wgt)[:n]
 
 
 # -- aggregation ---------------------------------------------------------------

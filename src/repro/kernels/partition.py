@@ -51,6 +51,65 @@ def partition_histogram(part_ids: jax.Array, num_partitions: int,
     )(part_ids.reshape(nb, block))
 
 
+def _fused_probe_kernel(pk_ref, v0_ref, v1_ref, bk_ref, bc_ref, bv_ref,
+                        grp_ref, wgt_ref, *, num_groups: int):
+    pk = pk_ref[0]                                     # (block,)
+    bk = bk_ref[0]                                     # (m,)
+    bc = bc_ref[0]
+    bv = bv_ref[0]
+    # one-hot equality probe: build keys are unique (join contract), so a
+    # probe row matches at most one build column and the masked row-sum of
+    # the one-hot matrix *is* the gathered build category
+    match = jnp.logical_and(pk[:, None] == bk[None, :],
+                            bv[None, :] != 0)          # (block, m)
+    mi = match.astype(jnp.int32)
+    found = jnp.sum(mi, axis=1) > 0
+    cat = jnp.sum(mi * bc[None, :], axis=1)
+    grp_ref[0] = cat % num_groups
+    wgt_ref[0] = jnp.where(found, v0_ref[0] * v1_ref[0],
+                           jnp.float32(0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "block",
+                                             "interpret"))
+def fused_probe(probe_keys: jax.Array, v0: jax.Array, v1: jax.Array,
+                build_keys: jax.Array, build_cat: jax.Array,
+                build_valid: jax.Array, num_groups: int,
+                block: int = 128, interpret: bool = False):
+    """Fused partition+probe over one join bucket.
+
+    probe_keys/v0/v1: (N,) probe-side columns; build_keys/build_cat/
+    build_valid: (M,) build-side columns (``build_valid`` masks padding
+    rows). The whole build side rides along as one VMEM-resident block per
+    grid step — callers gate on M so the (block, M) one-hot stays inside
+    VMEM. Returns ``(group, weight)`` aligned with probe rows: non-matching
+    rows get group 0 / weight 0, the same null encoding as the unfused
+    join → where() → mod pipeline.
+    """
+    n = probe_keys.shape[0]
+    m = build_keys.shape[0]
+    block = min(block, n)
+    assert n % block == 0
+    nb = n // block
+    kernel = functools.partial(_fused_probe_kernel, num_groups=num_groups)
+    probe_spec = pl.BlockSpec((1, block), lambda i: (i, 0))
+    build_spec = pl.BlockSpec((1, m), lambda i: (0, 0))
+    grp, wgt = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[probe_spec, probe_spec, probe_spec,
+                  build_spec, build_spec, build_spec],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                   pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int32),
+                   jax.ShapeDtypeStruct((nb, block), jnp.float32)],
+        interpret=interpret,
+    )(probe_keys.reshape(nb, block), v0.reshape(nb, block),
+      v1.reshape(nb, block), build_keys.reshape(1, m),
+      build_cat.reshape(1, m), build_valid.reshape(1, m))
+    return grp.reshape(n), wgt.reshape(n)
+
+
 def _scatter_kernel(pid_ref, base_ref, rows_ref, out_ref, *,
                     block: int, num_partitions: int, width: int):
     ids = pid_ref[0]                                   # (block,)

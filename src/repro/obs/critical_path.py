@@ -15,7 +15,12 @@ downstream stage. For every step the invocation's wall time is split:
                   step's start (scheduling/driver latency, admission).
 
 The totals answer the operator's question directly: *is this query bound
-by compute, data movement, slot contention, or queueing?*
+by compute, data movement, slot contention, or queueing?* Pipelined
+(partition-granularity) execution makes producer and consumer spans
+overlap; the path then follows the earliest-released producer with a zero
+queue gap, and the breakdown attributes each wall-clock instant to exactly
+one step (chronological frontier walk), so the phase totals sum to the
+makespan whether stages barrier or pipeline.
 """
 
 from __future__ import annotations
@@ -156,8 +161,22 @@ def critical_path(spans, app: str | None = None) -> CriticalPath | None:
         if not preds:
             chain.append((cur, max(0.0, cur.start - trace_start)))
             break
-        pred = max(preds, key=lambda s: s.end)
-        chain.append((cur, max(0.0, cur.start - pred.end)))
+        # A predecessor only *gated* this invocation if it finished before
+        # the invocation started; among those the latest finisher is the
+        # binding one. Under a pipelined (partition-granularity) launch the
+        # consumer may start before any producer ends — producer and
+        # consumer spans genuinely overlap — so when no predecessor
+        # finished in time, follow the one released first (earliest end):
+        # it bounds how early the overlap could begin, and the queue gap
+        # is zero because nothing idled between the two.
+        gating = [p for p in preds if p.end <= cur.start]
+        if gating:
+            pred = max(gating, key=lambda s: s.end)
+            gap = max(0.0, cur.start - pred.end)
+        else:
+            pred = min(preds, key=lambda s: s.end)
+            gap = 0.0
+        chain.append((cur, gap))
         visited.add(pred.attrs.get("stage", pred.name))
         cur = pred
 
@@ -167,12 +186,23 @@ def critical_path(spans, app: str | None = None) -> CriticalPath | None:
         steps.append(PathStep(span.name, span.attrs.get("stage", span.name),
                               span.node, span.start, span.end, compute,
                               store, wait, gap))
-    breakdown = {
-        "compute": sum(s.compute for s in steps),
-        "store": sum(s.store for s in steps),
-        "slot_wait": sum(s.slot_wait for s in steps),
-        "queue": sum(s.queue for s in steps),
-    }
+    # Aggregate via a chronological frontier walk so overlapped path steps
+    # are only counted once: each step contributes the wall-clock window it
+    # *extends* beyond everything already attributed (w), with its
+    # compute/store/wait split scaled into that window, plus any idle gap
+    # before it. The totals therefore sum to the makespan even when
+    # pipelined steps overlap; on non-overlapping chains w equals the
+    # step's full duration and the numbers are unchanged.
+    breakdown = {k: 0.0 for k in PHASES}
+    frontier = trace_start
+    for s in sorted(steps, key=lambda s: s.start):
+        breakdown["queue"] += max(0.0, s.start - frontier)
+        w = max(0.0, s.end - max(s.start, frontier))
+        scale = (w / s.seconds) if s.seconds > 0 else 0.0
+        breakdown["compute"] += s.compute * scale
+        breakdown["store"] += s.store * scale
+        breakdown["slot_wait"] += s.slot_wait * scale
+        frontier = max(frontier, s.end)
     return CriticalPath(app if app is not None else terminal.trace,
                         max(0.0, terminal.end - trace_start), steps,
                         breakdown)

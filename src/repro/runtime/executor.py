@@ -92,12 +92,28 @@ class DAGExecutor:
 
     def __init__(self, runtime: "Runtime", barrier: bool = False,
                  max_recoveries: int = 8,
-                 recovery: str | DecisionNode = "lineage"):
+                 recovery: str | DecisionNode = "lineage",
+                 pipeline: bool = False):
         self.runtime = runtime
         self.barrier = barrier
         self.max_recoveries = max_recoveries
         self.recovery = recovery
+        self.pipeline = pipeline
         self._recover_lock = threading.Lock()
+        # pipelined mode: committed invocation names + a condition the
+        # metrics listener notifies on every commit — partition-granularity
+        # readiness (an invocation whose ``needs`` are all committed may
+        # run before its producer *stage* has finished)
+        self._ok: set[str] = set()
+        self._ok_cond = threading.Condition()
+        self._abort = threading.Event()
+
+    def _on_record(self, rec) -> None:
+        if rec.status != "ok":
+            return
+        with self._ok_cond:
+            self._ok.add(rec.name)
+            self._ok_cond.notify_all()
 
     def run(self, stages: Sequence[RuntimeStage],
             pc: PrivateController | None = None,
@@ -153,6 +169,10 @@ class DAGExecutor:
                 # app needs headroom); otherwise dropped immediately
                 self.runtime.store.reclaim_stage(app, src)
 
+        prev_honor = getattr(invoker, "honor_plan", False)
+        if self.pipeline:
+            metrics.subscribe(self._on_record)
+            invoker.honor_plan = True
         try:
             if self.barrier or not getattr(invoker, "parallel", False):
                 self._run_serial(pending, completed, invoker, dep_invs,
@@ -161,6 +181,9 @@ class DAGExecutor:
                 self._run_concurrent(pending, completed, invoker, dep_invs,
                                      finish)
         finally:
+            if self.pipeline:
+                invoker.honor_plan = prev_honor
+                metrics.unsubscribe(self._on_record)
             if own_root is not None:
                 tr.release_anchor(("query", app))
                 tr.end(own_root, stages=len(known))
@@ -201,6 +224,25 @@ class DAGExecutor:
             while pending or in_flight:
                 ready = [n for n, st in pending.items()
                          if all(d in completed for d in st.deps)]
+                if self.pipeline:
+                    # partial readiness: a stage whose every invocation
+                    # carries partition-granularity ``needs`` may launch
+                    # while its producer stages are still in flight — its
+                    # driver admits invocations wave-by-wave as their
+                    # producers commit. Capacity-capped so a wave-waiting
+                    # consumer can never occupy the driver slot its own
+                    # producer is queued for.
+                    active = {st.name for st in in_flight.values()}
+                    for n, st in pending.items():
+                        if (n in ready
+                                or len(in_flight) + len(ready)
+                                >= max_drivers - 1):
+                            continue
+                        if (st.invocations
+                                and all(iv.needs for iv in st.invocations)
+                                and all(d in completed or d in active
+                                        for d in st.deps)):
+                            ready.append(n)
                 for name in ready:
                     st = pending.pop(name)
                     fut = drivers.submit(self._run_stage_recovering, st,
@@ -213,7 +255,15 @@ class DAGExecutor:
                 done, _ = wait(in_flight, return_when=FIRST_COMPLETED)
                 for fut in done:
                     st = in_flight.pop(fut)
-                    fut.result()        # propagate the first failure
+                    try:
+                        fut.result()    # propagate the first failure
+                    except BaseException:
+                        # wake every wave-waiting driver before unwinding,
+                        # or the pool shutdown would join them forever
+                        self._abort.set()
+                        with self._ok_cond:
+                            self._ok_cond.notify_all()
+                        raise
                     finish(st)
 
     # -- lineage-based recovery -----------------------------------------------
@@ -252,7 +302,11 @@ class DAGExecutor:
             while True:
                 try:
                     if todo:
-                        invoker.run_stage(todo, deps=deps)
+                        if (self.pipeline
+                                and all(iv.needs for iv in todo)):
+                            self._run_stage_waves(todo, deps)
+                        else:
+                            invoker.run_stage(todo, deps=deps)
                     return
                 except StageLostError as e:
                     rounds += 1
@@ -275,6 +329,36 @@ class DAGExecutor:
             if app is not None:
                 tr.release_anchor(("stage", app, st.name))
                 tr.end(ssp, recovery_rounds=rounds)
+
+    def _run_stage_waves(self, todo: list[Invocation],
+                         deps: tuple[str, ...]) -> None:
+        """Admit a stage's invocations in waves as their producers commit.
+
+        Every invocation in ``todo`` carries ``needs`` (producer invocation
+        names); a wave is the subset whose needs are all committed. The
+        commit listener wakes the wait, so a join partition starts the
+        moment its input buckets are published — no stage barrier. The
+        timeout re-check and the abort event keep a wave from outliving a
+        failed producer stage.
+        """
+        invoker = self.runtime.invoker
+        remaining = list(todo)
+        while remaining:
+            with self._ok_cond:
+                while True:
+                    if self._abort.is_set():
+                        raise RecoveryError(
+                            "pipelined stage abandoned: an upstream stage "
+                            "failed while invocations awaited their "
+                            "producers")
+                    wave = [iv for iv in remaining
+                            if set(iv.needs) <= self._ok]
+                    if wave:
+                        break
+                    self._ok_cond.wait(timeout=0.1)
+            launched = {iv.name for iv in wave}
+            remaining = [iv for iv in remaining if iv.name not in launched]
+            invoker.run_stage(wave, deps=deps)
 
     def _recover(self, err: StageLostError) -> None:
         """Re-execute the lost partitions' producers, bottom-up."""
@@ -380,10 +464,11 @@ class Runtime:
                 planner: StagePlanner | None = None,
                 barrier: bool = False, max_recoveries: int = 8,
                 recovery: str | DecisionNode = "lineage",
-                ) -> dict[str, StageMetrics]:
+                pipeline: bool = False) -> dict[str, StageMetrics]:
         return DAGExecutor(self, barrier=barrier,
                            max_recoveries=max_recoveries,
-                           recovery=recovery).run(stages, pc=pc,
+                           recovery=recovery,
+                           pipeline=pipeline).run(stages, pc=pc,
                                                   planner=planner)
 
     def result(self, app: str, stage: str = "result", column: str = "sum",

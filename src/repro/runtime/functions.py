@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.analytics import operators as ops
 from repro.analytics.table import Table
+from repro.kernels import ops as kops
 
 FUNCTIONS: Dict[str, Callable] = {}
 
@@ -94,7 +95,11 @@ def shuffle_write(ctx) -> None:
     nb = int(p["num_buckets"])
     pids = ops.partition_ids(t["key"], nb)
     order, offsets = ops.grouping_indices(pids, nb)
-    permuted = t.take(order)
+    # land the permuted buffer on the host ONCE (one transfer per column):
+    # every bucket slice is then a zero-copy numpy view, and readers
+    # concatenate views with a memcpy — device programs are reserved for
+    # the kernels, not for per-(shape, range) slice/concat plumbing
+    permuted = Table({k: np.asarray(v) for k, v in t.take(order).columns.items()})
     bounds = np.asarray(offsets)
     out = {r: permuted.slice(bounds[r], bounds[r + 1])
            for r in range(nb) if bounds[r + 1] > bounds[r]}
@@ -133,22 +138,69 @@ def broadcast_write(ctx) -> None:
         ctx.put(p["dst"], p["partition"], t)
 
 
-def _read_side(ctx, stage: str, parts):
+PREFETCH_WINDOW = 2     # in-flight fetches per side (double buffering)
+
+
+def _read_side(ctx, stage: str, parts, window: int = PREFETCH_WINDOW):
     """Concatenate a join side's partitions in ONE multi-way concat per
-    column (``Table.concat_all``) instead of the O(P²) pairwise chain."""
+    column (``Table.concat_all``) instead of the O(P²) pairwise chain.
+
+    Under an active pipeline plan the reads are double-buffered: the first
+    ``window`` partitions are prefetched up front and partition ``i+window``
+    starts fetching before partition ``i`` is consumed — per-partition read
+    *order* (and therefore the store's fault-hook match counts per stage)
+    is exactly the barrier path's.
+    """
     if parts == "all":
         return ctx.get_all(stage)
-    got = [t for t in (ctx.get(stage, part) for part in parts)
-           if t is not None and t.num_rows]
+    parts = list(parts)
+    # a single-partition side has nothing to double-buffer: a prefetch
+    # thread would only add a spawn + GIL handoff to a read we immediately
+    # block on
+    pipelined = ctx.plan in ("pipelined", "fused") and len(parts) > 1
+    if pipelined:
+        for part in parts[:window]:
+            ctx.prefetch(stage, part)
+    got = []
+    for i, part in enumerate(parts):
+        if pipelined and i + window < len(parts):
+            ctx.prefetch(stage, parts[i + window])
+        t = ctx.get(stage, part)
+        if t is not None and t.num_rows:
+            got.append(t)
     return Table.concat_all(got) if got else None
 
 
 def _join_partition(ctx, method: str) -> None:
     p = ctx.params
+    plan = ctx.plan
+    if plan in ("pipelined", "fused"):
+        # start the (small) build side streaming in while the fact side is
+        # read — the cross-side half of the double buffering. A one-bucket
+        # build side (co-partitioned merge join) is read directly: there is
+        # no second fetch to overlap it with.
+        dim_parts = list(ctx.partitions(p["dim_stage"])
+                         if p["dim_partitions"] == "all"
+                         else p["dim_partitions"])
+        if len(dim_parts) > 1:
+            for part in dim_parts:
+                ctx.prefetch(p["dim_stage"], part)
     fact = _read_side(ctx, p["fact_stage"], p["fact_partitions"])
     dim = _read_side(ctx, p["dim_stage"], p["dim_partitions"])
     if fact is None or fact.num_rows == 0 or dim is None or dim.num_rows == 0:
         ctx.put(p["dst"], p["partition"], _empty_joined())
+        return
+    if plan == "fused":
+        # one dispatch replaces join -> where(found) -> mod: same output
+        # encoding (non-matching rows carry group 0 / weight 0). Publish as
+        # device arrays like the unfused path does, so the aggregation
+        # stage reads the same array kind under either plan.
+        group, weight = kops.fused_probe_groups(
+            fact["key"], fact["v0"], fact["v1"], dim["key"], dim["cat"],
+            int(p["num_groups"]))
+        ctx.put(p["dst"], p["partition"],
+                Table({"group": jnp.asarray(group),
+                       "weight": jnp.asarray(weight)}))
         return
     joined = ops.join(fact, dim, method=method)
     found = joined["found"]

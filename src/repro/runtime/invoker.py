@@ -32,6 +32,7 @@ Two backends:
 
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field, replace
@@ -41,7 +42,12 @@ from repro.core.controllers import GlobalController
 from repro.obs.tracer import get_tracer
 from repro.runtime.faults import InjectedCrashError
 from repro.runtime.metrics import InvocationRecord, MetricsSink
-from repro.runtime.store import ShuffleStore
+from repro.runtime.store import PrefetchHandle, ShuffleStore
+
+
+def _padding_snapshot() -> tuple[int, int]:
+    from repro.kernels.ops import padding_counters
+    return padding_counters()
 
 
 class SlotGate:
@@ -80,6 +86,10 @@ class Invocation:
     priority: int = 0
     params: Mapping[str, Any] = field(default_factory=dict)
     batchable: bool = False
+    # producer invocation names whose commits make THIS invocation's inputs
+    # complete — partition-granularity readiness for the pipelined executor
+    # (empty: only whole-stage dependencies gate it, the barrier semantics)
+    needs: tuple = ()
 
 
 class FnContext:
@@ -93,20 +103,84 @@ class FnContext:
     read out of ``profile_feedback``).
     """
 
-    def __init__(self, store: ShuffleStore, inv: Invocation):
+    def __init__(self, store: ShuffleStore, inv: Invocation,
+                 honor_plan: bool = False):
         self._store = store
         self.app = inv.app
         self.node = inv.node
         self.index = inv.index
         self.params = dict(inv.params)
         self.writer = inv.name
+        self.honor_plan = honor_plan
         self.bytes_in = 0
         self.bytes_out = 0
         self.store_seconds = 0.0
+        self.rows_actual = 0
+        self.rows_padded = 0
         self.reads_by_node: dict[int, int] = {}
         self.writes: list[tuple[str, int]] = []   # lineage: (stage, part)
+        self._prefetched: dict[tuple[str, int], PrefetchHandle] = {}
+        self._pf_lock = threading.Lock()
+
+    @property
+    def plan(self) -> str:
+        """The pipeline decision's mode for this invocation ("barrier" /
+        "pipelined" / "fused") — reads as "barrier" unless the executor was
+        launched with pipelining enabled, so the data-plane fast paths stay
+        inert when the knob is off (the invisibility baseline)."""
+        if not self.honor_plan:
+            return "barrier"
+        return str(self.params.get("plan", "barrier"))
+
+    def prefetch(self, stage: str, partition: int) -> None:
+        """Start fetching ``(stage, partition)`` on a background thread.
+
+        A later ``get`` of the same key joins the handle and charges ONLY
+        the blocked remainder to ``store_seconds`` — overlap between the
+        fetch and the caller's compute is the pipelining win. Read-source
+        and byte accounting happen exactly once (in the worker, merged at
+        join time), so store traffic totals are identical to an unprefetched
+        read; the store-side fault hook (``on_get``) fires from the worker
+        with the same per-(app, stage) ordering a direct read would produce.
+        Duplicate prefetches of a live key are no-ops.
+        """
+        key = (stage, int(partition))
+        with self._pf_lock:
+            if key in self._prefetched:
+                return
+            tr = get_tracer()
+            parent = tr.current()     # the invocation span of the issuer
+            store, app, node = self._store, self.app, self.node
+
+            def fetch():
+                sources = store.read_sources(app, stage, key[1], node)
+                t0 = time.perf_counter()
+                try:
+                    t = store.get(app, stage, key[1], node)
+                finally:
+                    tr.record(f"prefetch/{stage}/{key[1]}", "store", t0,
+                              trace=app, node=node, parent=parent,
+                              kind="prefetch")
+                return t, sources
+
+            self._prefetched[key] = PrefetchHandle(fetch)
 
     def get(self, stage: str, partition: int):
+        with self._pf_lock:
+            handle = self._prefetched.pop((stage, int(partition)), None)
+        if handle is not None:
+            t0 = time.perf_counter()
+            try:
+                t, sources = handle.join()
+            finally:
+                # only the blocked tail counts: the overlapped fetch time
+                # is exactly what pipelining saved
+                self.store_seconds += time.perf_counter() - t0
+            for src, b in sources.items():
+                self.reads_by_node[src] = self.reads_by_node.get(src, 0) + b
+            if t is not None:
+                self.bytes_in += int(t.nbytes)
+            return t
         for src, b in self._store.read_sources(
                 self.app, stage, partition, self.node).items():
             self.reads_by_node[src] = self.reads_by_node.get(src, 0) + b
@@ -222,6 +296,10 @@ class Invoker:
         self.injector = injector
         self.batching = batching
         self.max_batch = max_batch
+        # set by the executor for pipelined runs: function bodies then honor
+        # the planner's per-invocation "plan" parameter (prefetch / fused
+        # kernel); off by default so direct invoker use stays barrier-exact
+        self.honor_plan = False
         self.registry: Mapping[str, Callable[[FnContext], Any]] | None = None
 
     def _resolve(self, name: str) -> Callable[[FnContext], Any]:
@@ -336,8 +414,13 @@ class Invoker:
                         self.intercept(inv, attempt)
                     if self.injector is not None:
                         self.injector.before_body(inv, attempt)
-                    ctx = FnContext(self.store, inv)
+                    ctx = FnContext(self.store, inv,
+                                    honor_plan=self.honor_plan)
+                    pad0 = _padding_snapshot()
                     fn(ctx)
+                    pad1 = _padding_snapshot()
+                    ctx.rows_actual = pad1[0] - pad0[0]
+                    ctx.rows_padded = pad1[1] - pad0[1]
                     if self.injector is not None:
                         self.injector.after_body(inv, attempt)
                 except InjectedCrashError as e:
@@ -391,7 +474,8 @@ class Invoker:
                 bytes_in=ctx.bytes_in, bytes_out=ctx.bytes_out,
                 store_seconds=ctx.store_seconds,
                 reads_by_node=dict(ctx.reads_by_node), deps=deps,
-                priority=inv.priority, writes=tuple(ctx.writes)))
+                priority=inv.priority, writes=tuple(ctx.writes),
+                rows_actual=ctx.rows_actual, rows_padded=ctx.rows_padded))
             if sp is not None:
                 sp.attrs.update(status=status, attempts=attempt + 1)
                 tr.record(f"attempt/{attempt}", "invoker", t0, end=t1,
@@ -424,7 +508,9 @@ class Invoker:
             store_seconds=ctx.store_seconds if ctx else 0.0,
             reads_by_node=dict(ctx.reads_by_node) if ctx else {},
             deps=deps, priority=inv.priority,
-            writes=tuple(ctx.writes) if ctx else ()))
+            writes=tuple(ctx.writes) if ctx else (),
+            rows_actual=ctx.rows_actual if ctx else 0,
+            rows_padded=ctx.rows_padded if ctx else 0))
 
     def _execute_batch(self, invs: list[Invocation],
                        deps: tuple[str, ...]) -> None:
@@ -515,8 +601,13 @@ class Invoker:
                                 self.intercept(inv, attempt)
                             if self.injector is not None:
                                 self.injector.before_body(inv, attempt)
-                            ctx = FnContext(self.store, inv)
+                            ctx = FnContext(self.store, inv,
+                                            honor_plan=self.honor_plan)
+                            pad0 = _padding_snapshot()
                             fn(ctx)
+                            pad1 = _padding_snapshot()
+                            ctx.rows_actual = pad1[0] - pad0[0]
+                            ctx.rows_padded = pad1[1] - pad0[1]
                             if self.injector is not None:
                                 self.injector.after_body(inv, attempt)
                         except InjectedCrashError:

@@ -40,6 +40,11 @@ class InvocationRecord:
     # refinement that lets recovery replay only the lost partitions' actual
     # producers instead of every registered one
     writes: tuple = ()
+    # shape-class padding tally across this invocation's kernel dispatches:
+    # padded minus actual rows is wasted work the power-of-two quantizer
+    # added (surfaced as ``padding_overhead`` in profile feedback)
+    rows_actual: int = 0
+    rows_padded: int = 0
 
     @property
     def seconds(self) -> float:
@@ -63,6 +68,16 @@ class StageMetrics:
     compute_seconds: float = 0.0   # seconds - store_seconds, per record
     bytes_in: int = 0
     bytes_out: int = 0
+    rows_actual: int = 0
+    rows_padded: int = 0
+
+    @property
+    def padding_overhead(self) -> float:
+        """Fraction of kernel-dispatched rows that were padding
+        (0.0 when nothing was padded or nothing was dispatched)."""
+        if self.rows_padded <= self.rows_actual:
+            return 0.0
+        return (self.rows_padded - self.rows_actual) / self.rows_padded
 
 
 class MetricsSink:
@@ -71,10 +86,26 @@ class MetricsSink:
     def __init__(self):
         self._lock = threading.Lock()
         self.records: list[InvocationRecord] = []
+        self._listeners: list = []
+
+    def subscribe(self, fn) -> None:
+        """Call ``fn(record)`` after every appended record — the pipelined
+        executor's partition-readiness signal (commits, not stage barriers,
+        wake waiting consumers)."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def unsubscribe(self, fn) -> None:
+        with self._lock:
+            if fn in self._listeners:
+                self._listeners.remove(fn)
 
     def record(self, rec: InvocationRecord) -> None:
         with self._lock:
             self.records.append(rec)
+            listeners = list(self._listeners)
+        for fn in listeners:       # outside the lock: listeners may re-enter
+            fn(rec)
 
     def for_app(self, app: str) -> list[InvocationRecord]:
         with self._lock:
@@ -112,6 +143,8 @@ class MetricsSink:
             m.compute_seconds += r.compute_seconds
             m.bytes_in += r.bytes_in
             m.bytes_out += r.bytes_out
+            m.rows_actual += r.rows_actual
+            m.rows_padded += r.rows_padded
         return out
 
     def stage_spans(self, app: str | None = None,
@@ -148,6 +181,7 @@ class MetricsSink:
             out[f"{name}.crashed"] = m.crashed
             out[f"{name}.starved"] = m.starved
             out[f"{name}.error"] = m.error
+            out[f"{name}.padding_overhead"] = m.padding_overhead
         return out
 
     def format_table(self, app: str) -> str:
@@ -159,7 +193,8 @@ class MetricsSink:
         """
         lines = [f"{'stage':16s} {'inv':>4s} {'pre':>4s} {'stv':>4s} "
                  f"{'err':>4s} {'seconds':>9s} "
-                 f"{'store_s':>9s} {'bytes_in':>10s} {'bytes_out':>10s}"]
+                 f"{'store_s':>9s} {'bytes_in':>10s} {'bytes_out':>10s} "
+                 f"{'pad%':>5s}"]
         stages = self.by_stage(app)
         spans = self.stage_spans(app)
         total = StageMetrics()
@@ -169,7 +204,8 @@ class MetricsSink:
             lines.append(f"{name:16s} {m.invocations:4d} {m.preempted:4d} "
                          f"{m.starved:4d} {m.error:4d} "
                          f"{m.seconds:9.4f} {m.store_seconds:9.4f} "
-                         f"{m.bytes_in:10d} {m.bytes_out:10d}")
+                         f"{m.bytes_in:10d} {m.bytes_out:10d} "
+                         f"{100 * m.padding_overhead:5.1f}")
             total.invocations += m.invocations
             total.preempted += m.preempted
             total.starved += m.starved
@@ -178,11 +214,14 @@ class MetricsSink:
             total.store_seconds += m.store_seconds
             total.bytes_in += m.bytes_in
             total.bytes_out += m.bytes_out
+            total.rows_actual += m.rows_actual
+            total.rows_padded += m.rows_padded
         m = total
         lines.append(f"{'TOTAL':16s} {m.invocations:4d} {m.preempted:4d} "
                      f"{m.starved:4d} {m.error:4d} "
                      f"{m.seconds:9.4f} {m.store_seconds:9.4f} "
-                     f"{m.bytes_in:10d} {m.bytes_out:10d}")
+                     f"{m.bytes_in:10d} {m.bytes_out:10d} "
+                     f"{100 * m.padding_overhead:5.1f}")
         return "\n".join(lines)
 
     # -- trace replay into the simulator ---------------------------------------

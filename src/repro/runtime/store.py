@@ -38,6 +38,40 @@ class QuotaExceededError(RuntimeError):
     """A write could not be admitted under the application's store quota."""
 
 
+class PrefetchHandle:
+    """A fetch running on a background thread (double-buffered reads).
+
+    ``join`` blocks until the thunk finishes and returns its result,
+    re-raising whatever it raised — so a lost-stage tombstone surfaces to
+    the consumer at join time exactly as a direct read would. The worker is
+    a daemon: a handle abandoned by a crashed invocation never blocks
+    shutdown, and its store accounting already happened in the worker (a
+    retry's own reads come on top, same as a retried direct read).
+    """
+
+    def __init__(self, fn):
+        self._result = None
+        self._exc: BaseException | None = None
+        self._thread = threading.Thread(target=self._run, args=(fn,),
+                                        daemon=True)
+        self._thread.start()
+
+    def _run(self, fn) -> None:
+        try:
+            self._result = fn()
+        except BaseException as e:   # re-raised at join()
+            self._exc = e
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def join(self):
+        self._thread.join()
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+
 class StageLostError(RuntimeError):
     """A read hit shuffle data that *was* written but has since been lost.
 
@@ -306,6 +340,14 @@ class ShuffleStore:
                   bytes=int(t.nbytes) if t is not None else 0,
                   status="ok" if t is not None else "miss")
         return t
+
+    def get_async(self, app: str, stage: str, partition: int, node: int,
+                  account: bool = True) -> PrefetchHandle:
+        """``get`` on a background thread — the double-buffered read used by
+        the pipelined data plane (fetch bucket k+1 while probing bucket k).
+        Accounting and fault hooks run in the worker, once."""
+        return PrefetchHandle(
+            lambda: self.get(app, stage, partition, node, account))
 
     def _get_impl(self, app: str, stage: str, partition: int, node: int,
                   account: bool = True):

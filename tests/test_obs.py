@@ -215,6 +215,32 @@ def test_critical_path_store_bound_and_batch_wait_inheritance():
     assert cp.breakdown["compute"] == pytest.approx(4.0)
 
 
+def test_critical_path_overlapping_producer_consumer():
+    """Pipelined launch: the consumer starts before either producer ends.
+    The path follows the earliest-released producer with a zero queue gap,
+    and the frontier-walk breakdown attributes each instant once, so the
+    phase totals still sum to the makespan despite the overlap."""
+    spans = [
+        _stage(1, "A", (), 0.0, 12.0),
+        _stage(2, "B", ("A",), 4.0, 14.0),
+        _inv(3, "A", 0.0, 10.0),                       # released first
+        Span(4, "app", "app/A/1", "invoker", 0.0, end=12.0, node=1,
+             attrs={"kind": "invocation", "stage": "A"}),
+        _inv(5, "B", 4.0, 14.0, node=1),               # overlaps both A's
+        Span(6, "app", "get/A", "store", 5.0, end=10.0, parent_id=5),
+    ]
+    cp = critical_path(spans, app="app")
+    assert [s.stage for s in cp.steps] == ["A", "B"]
+    assert cp.steps[0].name == "app/A/0"      # earliest end, not latest
+    assert cp.steps[1].queue == pytest.approx(0.0)   # overlap -> no idle
+    assert cp.makespan == pytest.approx(14.0)
+    # B extends the frontier only over 10..14 (w=4 of its 10s span), its
+    # 5s store and 5s compute scale by 0.4 into that window
+    assert cp.breakdown["store"] == pytest.approx(2.0)
+    assert cp.breakdown["compute"] == pytest.approx(12.0)
+    assert sum(cp.breakdown.values()) == pytest.approx(cp.makespan)
+
+
 def test_critical_path_none_without_invocations():
     assert critical_path([], app="x") is None
     assert critical_path([_stage(1, "A", (), 0.0, 1.0)], app="app") is None

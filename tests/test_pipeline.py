@@ -1,0 +1,273 @@
+"""Pipelined shuffle→join data plane: control-plane invisibility + kernels.
+
+The tentpole contract under test: pipelining is a *pipeline decision node*
+in the workflow, and whether the executor honors it (``pipeline=True``) is
+pure mechanism — the decision audit sequence, the per-stage record counts,
+lineage recovery sets and the numpy oracle result are identical with
+pipelining on or off, including under seeded fault plans whose crashes and
+losses land mid-prefetch. The fused partition+probe kernel is differential-
+tested against a from-scratch numpy oracle, and the padding-waste counters
+it feeds are checked end to end into ``profile_feedback``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.analytics import (
+    QueryStrategy,
+    execute_query_runtime,
+    synth_query_tables,
+)
+from repro.analytics.planner import build_query_workflow, tail_stages
+from repro.core.controllers import GlobalController
+from repro.core.decisions import DataDist, Decision, Schedule
+from repro.kernels import ops as kops
+from repro.runtime import (
+    CrashFault,
+    FaultInjector,
+    FaultPlan,
+    Runtime,
+    StageLossFault,
+)
+
+STRATEGIES = ("static_merge", "static_hash", "dynamic", "dynamic_fig6")
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return synth_query_tables(4096, 512, seed=11)
+
+
+def _run(tables, strat, pipeline, invoker="inline", plan=None,
+         recovery="lineage"):
+    fd, dd, ref = tables
+    gc = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc, invoker=invoker)
+    if plan is not None:
+        FaultInjector(plan).install(rt)
+    wf = build_query_workflow(QueryStrategy(strat))
+    got, _ = execute_query_runtime(fd, dd, QueryStrategy(strat), runtime=rt,
+                                   workflow=wf, pipeline=pipeline,
+                                   recovery=recovery)
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    assert sum(gc.used.values()) == 0
+    return rt, wf.last_run
+
+
+def _control_plane_view(rt, run):
+    """Everything the control plane can observe about one run, normalized
+    to be order-insensitive (a pipelined executor overlaps stages, so
+    wall-clock ordering legitimately differs)."""
+    return {
+        "decisions": [(n, d.func, d.scale) for n, d in run.sequence],
+        "records": sorted((r.name, r.status, r.attempt)
+                          for r in rt.metrics.records),
+        "bytes": {s: (m.bytes_in, m.bytes_out)
+                  for s, m in rt.metrics.by_stage("query").items()},
+        "recoveries": sorted((ev.lost_stage, ev.recovered)
+                             for ev in rt.recoveries),
+    }
+
+
+# -- invisibility: the pipeline flag changes mechanism, never the plan -------------
+
+
+@pytest.mark.parametrize("strat", STRATEGIES)
+def test_pipeline_invisible_to_control_plane(tables, strat):
+    views = []
+    for pipeline in (False, True):
+        rt, run = _run(tables, strat, pipeline)
+        views.append(_control_plane_view(rt, run))
+    assert views[0] == views[1]
+    # and the decision node really bound a pipelining mode (small tables ->
+    # the fused kernel path), it just wasn't honored in the barrier run
+    bound = dict((n, f) for n, f, _ in views[0]["decisions"])
+    assert bound["pipeline"] in ("fused", "pipelined", "barrier")
+
+
+@pytest.mark.parametrize("strat", ("static_merge", "dynamic"))
+def test_pipeline_invisible_under_threads_invoker(tables, strat):
+    views = []
+    for pipeline in (False, True):
+        rt, run = _run(tables, strat, pipeline, invoker="threads")
+        views.append(_control_plane_view(rt, run))
+    assert views[0] == views[1]
+
+
+def test_pipeline_decision_modes_from_context():
+    """The decision node is data-driven: tiny buckets -> fused, big buckets
+    with free slots -> pipelined, big buckets on a saturated cluster ->
+    barrier."""
+    from repro.analytics.planner import FUSED_BUCKET_BYTES, pipeline_decision
+    from repro.core.decisions import DecisionContext, NodeStatus
+
+    def ctx(bucket_bytes, free):
+        join = Decision("merge_join", 4, Schedule("round-robin", (0, 1)))
+        total = bucket_bytes * 4
+        return DecisionContext(
+            data_dist={"A": DataDist("A", {0: total // 2}),
+                       "B": DataDist("B", {1: total // 2})},
+            node_status=NodeStatus(total_slots={0: 8, 1: 8},
+                                   free_slots={0: free, 1: 0}),
+            decisions={"join": join})
+
+    assert pipeline_decision(ctx(1 << 10, free=4)).func == "fused"
+    big = FUSED_BUCKET_BYTES * 8
+    assert pipeline_decision(ctx(big, free=4)).func == "pipelined"
+    assert pipeline_decision(ctx(big, free=0)).func == "barrier"
+
+
+def test_needs_edges_cover_actual_producers():
+    """Partition-granularity readiness is sound only if ``needs`` names
+    every producer whose output the invocation may read: hash-distributed
+    joins need ALL shuffle writers (all-to-all), aggregation is 1:1."""
+    join_d = Decision("merge_join", 4, Schedule("round-robin", (0, 1)))
+    stages = {s.name: s for s in tail_stages(
+        "q", [(0, 0), (1, 1)], [(0, 0)], join_d,
+        DataDist("A", {0: 1 << 20}),
+        exchange=Decision("shuffle", 4, Schedule("round-robin", (0, 1))),
+        pipeline=Decision("pipelined", 2, Schedule("round-robin", (0, 1))))}
+    writers = {f"q/shuffle_fact/{i}" for i in (0, 1)} | {"q/shuffle_dim/0"}
+    for iv in stages["join"].invocations:
+        assert set(iv.needs) == writers
+        assert iv.params["plan"] == "pipelined"
+    for iv in stages["shuffle_fact"].invocations:
+        assert iv.needs == (f"q/scan_fact/{iv.index}",)
+    for iv in stages["partial_agg"].invocations:
+        assert iv.needs == (f"q/join/{iv.index}",)
+
+
+# -- invariance under fault plans --------------------------------------------------
+
+
+def test_pipeline_invariant_under_crash_landing_mid_join(tables):
+    """A crash-after on a join invocation lands after its prefetches were
+    issued and joined; the retry re-prefetches under a fresh context. The
+    recovery behavior (statuses, attempts, result) matches the barrier
+    run's exactly."""
+    views = []
+    for pipeline in (False, True):
+        plan = FaultPlan(crashes=[CrashFault("join", index=0, when="after")])
+        rt, run = _run(tables, "static_merge", pipeline, plan=plan)
+        views.append(_control_plane_view(rt, run))
+    assert views[0] == views[1]
+    statuses = [s for (n, s, _) in views[1]["records"]
+                if n == "query/join/0"]
+    assert statuses == ["crashed", "ok"]
+
+
+def test_pipeline_invariant_under_bucket_loss_mid_prefetch(tables):
+    """Losing a shuffle bucket stage on its first read makes the prefetch
+    worker itself hit the lost tombstone; the ``StageLostError`` must
+    surface at the consumer's ``get`` and drive the *same* lineage
+    recovery set as the barrier run."""
+    views = []
+    for pipeline in (False, True):
+        plan = FaultPlan(losses=[StageLossFault("fact_buckets", on_read=1)])
+        rt, run = _run(tables, "static_merge", pipeline, plan=plan)
+        views.append(_control_plane_view(rt, run))
+    assert views[0] == views[1]
+    assert views[1]["recoveries"], "the loss plan never fired"
+
+
+@pytest.mark.parametrize("seed", (3, 17))
+def test_pipeline_invariant_under_seeded_chaos(tables, seed):
+    views = []
+    for pipeline in (False, True):
+        plan = FaultPlan.seeded(seed, stages=("scan_fact", "join"),
+                                data_stages=("joined",), delay=0.01)
+        rt, run = _run(tables, "dynamic", pipeline, plan=plan)
+        views.append(_control_plane_view(rt, run))
+    assert views[0] == views[1]
+
+
+# -- fused partition+probe kernel vs numpy oracle ----------------------------------
+
+
+def _fused_oracle(pk, v0, v1, bk, bc, g):
+    lut = {int(k): int(c) for k, c in zip(bk, bc)}
+    grp = np.zeros(len(pk), np.int32)
+    wgt = np.zeros(len(pk), np.float32)
+    for i, k in enumerate(pk):
+        if int(k) in lut:
+            grp[i] = lut[int(k)] % g
+            wgt[i] = np.float32(v0[i]) * np.float32(v1[i])
+    return grp, wgt
+
+
+def _fused_case(n, m, seed=0, match=True):
+    rng = np.random.default_rng(seed)
+    bk = rng.permutation(2 * max(m, 1))[:m].astype(np.int32)
+    bc = rng.integers(0, 1000, m).astype(np.int32)
+    if match or m == 0:
+        pk = rng.choice(np.concatenate([bk, bk + 2 * max(m, 1)])
+                        if m else np.arange(1), size=n).astype(np.int32)
+    else:
+        pk = (rng.integers(0, 1 << 20, n) + 4 * max(m, 1)).astype(np.int32)
+    v0 = rng.standard_normal(n).astype(np.float32)
+    v1 = rng.standard_normal(n).astype(np.float32)
+    return pk, v0, v1, bk, bc
+
+
+@pytest.mark.parametrize("n,m,kwargs", [
+    (0, 16, {}),                    # empty probe side
+    (16, 0, {}),                    # empty build bucket
+    (1, 1, {}),                     # single rows
+    (100, 7, {}),                   # non-power-of-two both sides
+    (257, 63, {}),                  # just past a shape-class boundary
+    (512, 128, {"match": False}),   # no probe key matches
+    (4096, 4096, {}),               # at the VMEM-rows gate
+    (512, 5000, {}),                # past the gate -> jitted fallback
+])
+def test_fused_probe_groups_matches_oracle(n, m, kwargs):
+    pk, v0, v1, bk, bc = _fused_case(n, m, seed=n + m, **kwargs)
+    grp, wgt = kops.fused_probe_groups(pk, v0, v1, bk, bc, 64)
+    egrp, ewgt = _fused_oracle(pk, v0, v1, bk, bc, 64)
+    np.testing.assert_array_equal(np.asarray(grp), egrp)
+    np.testing.assert_allclose(np.asarray(wgt), ewgt, atol=1e-5)
+
+
+def test_fused_probe_groups_duplicate_probe_keys():
+    pk = np.asarray([5, 5, 5, 9, 9, 2, 2, 2], np.int32)
+    v0 = np.arange(8, dtype=np.float32)
+    v1 = np.ones(8, np.float32)
+    bk = np.asarray([5, 2], np.int32)
+    bc = np.asarray([70, 130], np.int32)
+    grp, wgt = kops.fused_probe_groups(pk, v0, v1, bk, bc, 64)
+    egrp, ewgt = _fused_oracle(pk, v0, v1, bk, bc, 64)
+    np.testing.assert_array_equal(np.asarray(grp), egrp)
+    np.testing.assert_allclose(np.asarray(wgt), ewgt, atol=1e-6)
+
+
+def test_fused_probe_kernel_interpret_matches_oracle():
+    """``force_kernel`` exercises the Pallas one-hot probe body (interpret
+    mode off-TPU) instead of the jitted sorted-search fallback."""
+    pk, v0, v1, bk, bc = _fused_case(256, 64, seed=42)
+    grp, wgt = kops.fused_probe_groups(pk, v0, v1, bk, bc, 64,
+                                       force_kernel=True)
+    egrp, ewgt = _fused_oracle(pk, v0, v1, bk, bc, 64)
+    np.testing.assert_array_equal(np.asarray(grp), egrp)
+    np.testing.assert_allclose(np.asarray(wgt), ewgt, atol=1e-5)
+
+
+# -- padding-waste counters --------------------------------------------------------
+
+
+def test_padding_counters_tally_shape_class_waste():
+    kops.reset_padding_counters()
+    pids = np.zeros(100, np.int32)
+    kops.grouping_indices(pids, 4)
+    actual, padded = kops.padding_counters()
+    assert actual == 100 and padded >= 128   # next shape class up
+
+
+def test_padding_overhead_surfaces_in_profile_feedback(tables):
+    rt, _ = _run(tables, "static_merge", pipeline=False)
+    fb = rt.metrics.profile_feedback("query")
+    pads = {k: v for k, v in fb.items() if k.endswith(".padding_overhead")}
+    assert pads, "no padding_overhead feedback emitted"
+    assert any(v > 0 for v in pads.values())   # 4096-row parts split unevenly
+    assert all(0.0 <= v < 1.0 for v in pads.values())
+    assert "pad%" in rt.metrics.format_table("query")
