@@ -1,0 +1,259 @@
+"""Elastic worker-plane benchmark: process pool vs threads, cold-start
+economics, and cross-plane elasticity decision parity.
+
+Three phases, one ``BENCH_elastic.json`` (repo root):
+
+1. **Backend fan-out sweep.** A compute-bound map stage (``cpu_spin`` — a
+   pure-Python loop that holds the GIL for its whole body) at fan-outs
+   32→1024 on the ``threads`` and ``process`` invokers with identical slot
+   budgets. On a multi-core host the process backend wins wall-clock at
+   high fan-out because worker subprocesses escape the GIL; ``host_cores``
+   is recorded so a single-vCPU run's numbers are read honestly.
+2. **Cold-start economics.** The same stage on a warm pool (prewarmed,
+   reused) vs cold-start-every-time (``idle_reap_s=0`` retires every
+   worker as it idles), reporting the measured function-seconds ratio —
+   the Lambada-style bill the warm pool exists to cut.
+3. **Decision parity.** The full query planned through one workflow on
+   both data planes with worker pools engaged (runtime: prewarmed
+   ``ProcessPoolInvoker``; simulator: ``ClusterSim`` cold-start twin with
+   the same warm pool) — the six-node decision sequences, including the
+   ``elastic`` node's func/scale, must be identical.
+
+    PYTHONPATH=src python benchmarks/bench_elastic.py [--smoke] [--reps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+FANOUTS = (32, 64, 256, 1024)
+SMOKE_FANOUTS = (8, 16)
+SPIN_ITERS = 50_000
+SMOKE_SPIN_ITERS = 10_000
+WORKERS = 4
+SMOKE_WORKERS = 2          # single-vCPU CI runners
+ECON_FANOUT, SMOKE_ECON_FANOUT = 12, 4
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_elastic.json"
+SMOKE_OUT_PATH = OUT_PATH.with_name("BENCH_elastic_smoke.json")
+
+
+def _pin_xla_single_thread() -> None:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_multi_thread_eigen=false"
+                               " intra_op_parallelism_threads=1").strip()
+
+
+def _spin_stage(app: str, fanout: int, iters: int):
+    from repro.runtime import Invocation, RuntimeStage
+
+    return RuntimeStage("spin", [
+        Invocation(f"{app}/spin/{i}", app, "spin", i, "cpu_spin", 0,
+                   priority=10,
+                   params={"dst": "spun", "partition": i, "iters": iters})
+        for i in range(fanout)])
+
+
+def _expected_acc(partition: int, iters: int) -> int:
+    x, acc = partition + 1, 0
+    for i in range(iters):
+        acc = (acc + x * i) % 1_000_003
+    return acc
+
+
+def _run_fanout(backend: str, fanout: int, iters: int, workers: int):
+    """One compute-bound fan-out on one backend under an identical slot
+    budget (``workers`` concurrent function slots). Returns (wall, extras).
+    """
+    import numpy as np
+
+    from repro.core.controllers import GlobalController
+    from repro.obs import get_tracer
+    from repro.runtime import Runtime
+
+    get_tracer().clear()
+    gc = GlobalController({0: workers})
+    rt = Runtime(gc, invoker=backend, max_workers=workers)
+    try:
+        if backend == "process":
+            rt.invoker.resize(workers)          # pre-warm outside the clock
+        t0 = time.perf_counter()
+        rt.execute([_spin_stage("spin", fanout, iters)])
+        wall = time.perf_counter() - t0
+        # verify a sample of the deterministic outputs
+        for part in (0, fanout // 2, fanout - 1):
+            t = rt.store.get("spin", "spun", part, node=0)
+            assert int(np.asarray(t["acc"])[0]) == _expected_acc(part, iters)
+        assert sum(gc.used.values()) == 0
+        extras = {}
+        if backend == "process":
+            extras = rt.invoker.pool.stats()
+        return wall, extras
+    finally:
+        if backend == "process":
+            rt.invoker.shutdown()
+
+
+def _run_economics(fanout: int, iters: int, workers: int, warm: bool):
+    """The same stage billed warm (prewarmed pool, reused) vs cold-start-
+    every-time (idle workers retire immediately, so every lease pays a
+    fresh provision)."""
+    from repro.core.controllers import GlobalController
+    from repro.runtime import Runtime
+    from repro.runtime.workers import ProcessPoolInvoker
+
+    gc = GlobalController({0: workers})
+    if warm:
+        rt = Runtime(gc, invoker="process", max_workers=workers)
+        rt.invoker.resize(workers)     # prewarm: pays provision up front
+    else:
+        rt = Runtime(gc, invoker="inline")
+        # idle_reap_s=0 retires every worker the moment it idles, so each
+        # lease is a fresh provision — the no-warm-pool baseline bill
+        rt.invoker = ProcessPoolInvoker(gc, rt.store, rt.metrics,
+                                        max_workers=workers, idle_reap_s=0.0)
+    try:
+        t0 = time.perf_counter()
+        rt.execute([_spin_stage("econ", fanout, iters)])
+        wall = time.perf_counter() - t0
+        stats = rt.invoker.pool.stats()
+        stats["wall_s"] = round(wall, 6)
+        return stats
+    finally:
+        rt.invoker.shutdown()
+
+
+def _run_parity(pool: int):
+    """Plan the query through one workflow on both planes with worker
+    pools engaged; return both decision sequences."""
+    from repro.analytics import (QueryStrategy, execute_query_runtime,
+                                 synth_query_tables)
+    from repro.analytics.planner import (build_query_workflow,
+                                         plan_query_with_workflow)
+    from repro.analytics.simulator import ClusterSim
+    from repro.core.controllers import GlobalController, PrivateController
+    from repro.runtime import Runtime
+
+    import numpy as np
+
+    fd, dd, ref = synth_query_tables(1 << 12, 1 << 10, seed=1,
+                                     fact_nodes=range(2), dim_nodes=[2, 3])
+    wf = build_query_workflow(QueryStrategy("dynamic"))
+    gc_rt = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc_rt, invoker="process", max_workers=pool)
+    try:
+        rt.invoker.resize(pool)
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("dynamic"),
+                                       runtime=rt, workflow=wf)
+        np.testing.assert_allclose(got, ref, atol=1e-2)
+    finally:
+        rt.invoker.shutdown()
+    seq_runtime = [(s, d.func, d.scale) for s, d in wf.last_run.sequence]
+
+    gc_sim = GlobalController({n: 8 for n in range(4)})
+    sim = ClusterSim(gc_sim, provision_s=0.5, warm_pool=pool)
+    pc = PrivateController("query", gc_sim, priority=10)
+    plan_query_with_workflow(sim, pc, fd, dd, QueryStrategy("dynamic"),
+                             workflow=wf)
+    sim.run()
+    seq_sim = [(s, d.func, d.scale) for s, d in wf.last_run.sequence]
+    return seq_runtime, seq_sim
+
+
+def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
+         out_path: Path | str | None = None) -> dict:
+    from repro.obs import write_bench_artifacts
+
+    rows = [] if rows is None else rows
+    if out_path is None:
+        # smoke runs must not clobber the committed full-run artifact
+        out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
+    fanouts = SMOKE_FANOUTS if smoke else FANOUTS
+    iters = SMOKE_SPIN_ITERS if smoke else SPIN_ITERS
+    workers = SMOKE_WORKERS if smoke else WORKERS
+    econ_fanout = SMOKE_ECON_FANOUT if smoke else ECON_FANOUT
+    host_cores = os.cpu_count() or 1
+
+    # -- phase 1: backend fan-out sweep ------------------------------------
+    sweep: dict = {}
+    for fanout in fanouts:
+        entry: dict = {}
+        for backend in ("threads", "process"):
+            walls, extras = [], {}
+            for _ in range(reps):
+                wall, extras = _run_fanout(backend, fanout, iters, workers)
+                walls.append(wall)
+            entry[f"{backend}_s"] = min(walls)
+            if extras:
+                entry["pool"] = extras
+        entry["speedup_process_vs_threads"] = \
+            entry["threads_s"] / entry["process_s"]
+        sweep[str(fanout)] = entry
+        for backend in ("threads", "process"):
+            rows.append((f"elastic/fanout{fanout}/{backend}",
+                         entry[f"{backend}_s"] * 1e6 / fanout,
+                         round(entry["speedup_process_vs_threads"], 3)))
+        print(f"# fanout {fanout}: threads {entry['threads_s']:.3f}s, "
+              f"process {entry['process_s']:.3f}s "
+              f"({entry['speedup_process_vs_threads']:.2f}x)",
+              file=sys.stderr)
+
+    # -- phase 2: warm pool vs cold-start-every-time -----------------------
+    warm = _run_economics(econ_fanout, iters, workers, warm=True)
+    cold = _run_economics(econ_fanout, iters, workers, warm=False)
+    ratio = cold["cost_function_seconds"] / \
+        max(warm["cost_function_seconds"], 1e-9)
+    rows.append(("elastic/economics/warm_vs_cold",
+                 warm["cost_function_seconds"] * 1e6, round(ratio, 3)))
+    print(f"# economics: warm {warm['cost_function_seconds']:.2f} fn-s "
+          f"({warm['cold_starts']} cold starts), cold-every-time "
+          f"{cold['cost_function_seconds']:.2f} fn-s "
+          f"({cold['cold_starts']} cold starts) -> {ratio:.2f}x",
+          file=sys.stderr)
+
+    # -- phase 3: elasticity decision parity across planes ------------------
+    seq_runtime, seq_sim = _run_parity(pool=workers if not smoke else 2)
+    parity = seq_runtime == seq_sim
+    assert parity, (seq_runtime, seq_sim)
+    assert seq_runtime[-1][0] == "elastic"
+
+    report = {
+        "benchmark": "elastic_worker_plane",
+        "host_cores": host_cores,
+        # the wall-clock claim (process beats threads at fan-out >= 256)
+        # requires real cores; on a single-vCPU host the sweep measures
+        # protocol overhead only
+        "multi_core_host": host_cores > 1,
+        "config": {"fanouts": list(fanouts), "spin_iters": iters,
+                   "workers": workers, "econ_fanout": econ_fanout,
+                   "reps": reps, "smoke": smoke},
+        "fanout_sweep": sweep,
+        "economics": {"warm_pool": warm, "cold_every_time": cold,
+                      "warm_vs_cold_fn_seconds_ratio": round(ratio, 3)},
+        "decision_parity": {
+            "identical": parity,
+            "sequence": [{"node": s, "func": f, "scale": int(sc)}
+                         for s, f, sc in seq_runtime]},
+        "observability": write_bench_artifacts(out_path, apps=["spin"]),
+    }
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {out_path} (host_cores={host_cores}, "
+          f"warm-vs-cold {ratio:.2f}x, parity={parity})", file=sys.stderr)
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fan-outs, 2 workers, 1 rep (CI)")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    _pin_xla_single_thread()
+    main(smoke=args.smoke,
+         reps=args.reps if args.reps is not None else (1 if args.smoke else 3),
+         out_path=args.out)

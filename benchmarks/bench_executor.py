@@ -1,7 +1,8 @@
 """Executor benchmark: barrier vs dependency-driven DAG execution.
 
 Runs the TPC-DS-like sub-query end-to-end on the serverless runtime under
-the ``threads`` invoker for all four strategies, once with the legacy
+the ``threads`` invoker (``--invoker process`` runs the same sweep on the
+process-backed worker plane) for all four strategies, once with the legacy
 barrier-per-stage executor and once with the dependency-driven scheduler,
 and emits ``BENCH_executor.json`` (repo root) with per-strategy wall-clock
 and speedups.
@@ -49,7 +50,8 @@ def _make_tables(rows: int, dim_rows: int):
                               dim_nodes=[2, 3])
 
 
-def _run_once(fd, dd, strategy: str, barrier: bool):
+def _run_once(fd, dd, strategy: str, barrier: bool,
+              invoker: str = "threads", max_workers: int = 8):
     from repro.analytics import QueryStrategy, execute_query_runtime
     from repro.core.controllers import GlobalController
     from repro.runtime import Runtime
@@ -59,17 +61,22 @@ def _run_once(fd, dd, strategy: str, barrier: bool):
     # one run per trace buffer: the exported artifact is the last run
     get_tracer().clear()
     gc = GlobalController({n: 8 for n in range(4)})
-    runtime = Runtime(gc, invoker="threads", net_bw=NET_BW,
-                      disaggregated=True)
-    t0 = time.perf_counter()
-    got, _ = execute_query_runtime(fd, dd, QueryStrategy(strategy),
-                                   runtime=runtime, barrier=barrier)
-    wall = time.perf_counter() - t0
-    return wall, got
+    runtime = Runtime(gc, invoker=invoker, net_bw=NET_BW,
+                      disaggregated=True, max_workers=max_workers)
+    try:
+        t0 = time.perf_counter()
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy(strategy),
+                                       runtime=runtime, barrier=barrier)
+        wall = time.perf_counter() - t0
+        return wall, got
+    finally:
+        if invoker == "process":
+            runtime.invoker.shutdown()
 
 
 def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
-         out_path: Path | str | None = None) -> dict:
+         out_path: Path | str | None = None,
+         invoker: str = "threads", max_workers: int = 8) -> dict:
     import numpy as np
 
     from repro.obs import write_bench_artifacts
@@ -89,7 +96,9 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
         for mode, barrier in (("barrier", True), ("deps", False)):
             walls = []
             for _ in range(reps):
-                wall, got = _run_once(fd, dd, strat, barrier)
+                wall, got = _run_once(fd, dd, strat, barrier,
+                                      invoker=invoker,
+                                      max_workers=max_workers)
                 np.testing.assert_allclose(got, ref, atol=1e-2)
                 walls.append(wall)
             entry[f"{mode}_s"] = min(walls)
@@ -102,7 +111,7 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
     deps_total = sum(r["deps_s"] for r in results.values())
     report = {
         "benchmark": "executor_barrier_vs_deps",
-        "invoker": "threads",
+        "invoker": invoker,
         "config": {"rows": n_rows, "dim_rows": n_dim, "nodes": 4,
                    "slots_per_node": 8, "net_bw": NET_BW,
                    "disaggregated": True, "reps": reps, "smoke": smoke},
@@ -134,8 +143,14 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None,
                     help="output JSON (default: BENCH_executor.json, or "
                          "BENCH_executor_smoke.json under --smoke)")
+    ap.add_argument("--invoker", default="threads",
+                    choices=["threads", "process", "inline"],
+                    help="function backend (process: real worker "
+                         "subprocesses; cap --max-workers on small hosts)")
+    ap.add_argument("--max-workers", type=int, default=8)
     args = ap.parse_args()
     _pin_xla_single_thread()
     main(smoke=args.smoke,
          reps=args.reps if args.reps is not None else (1 if args.smoke else 3),
-         out_path=args.out)
+         out_path=args.out, invoker=args.invoker,
+         max_workers=args.max_workers)

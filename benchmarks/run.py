@@ -15,6 +15,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks import (
     bench_dataplane,
+    bench_elastic,
     bench_executor,
     bench_faults,
     bench_sharing,
@@ -29,7 +30,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig4", "fig7", "fig8", "roofline", "executor",
-                             "sharing", "faults", "dataplane"])
+                             "sharing", "faults", "dataplane", "elastic"])
     args = ap.parse_args(argv)
 
     sections = {
@@ -41,6 +42,7 @@ def main(argv=None) -> None:
         "sharing": bench_sharing.main,
         "faults": bench_faults.main,
         "dataplane": bench_dataplane.main,
+        "elastic": bench_elastic.main,
     }
     if args.only:
         sections = {args.only: sections[args.only]}

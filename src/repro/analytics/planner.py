@@ -33,6 +33,7 @@ from repro.core.decisions import (
     DecisionWorkflow,
     Schedule,
     WorkflowRun,
+    elasticity_node,
     partition_skew,
 )
 
@@ -110,6 +111,16 @@ def join_fanout(join: Decision) -> int:
     return max(1, min(int(join.scale), MAX_JOIN_FANOUT))
 
 
+def decide_elastic(run: WorkflowRun, fanout: int, pool: int) -> Decision:
+    """Plant the elastic node's context contract — the upcoming fan-out and
+    the current pool size — and bind it. One helper shared by both planes,
+    so the profile keys (and therefore the bound sequences) cannot drift
+    between the simulator and the runtime."""
+    run.ctx.profile["elastic.fanout"] = int(fanout)
+    run.ctx.profile["elastic.pool"] = int(pool)
+    return run.decide("elastic")
+
+
 def exchange_decision(ctx: DecisionContext) -> Decision:
     """The exchange pattern follows the bound join decision: merge join
     hash-shuffles both sides into the join's bucket space, hash join
@@ -171,13 +182,17 @@ def pipeline_decision(ctx: DecisionContext) -> Decision:
 
 def build_query_workflow(strategy, name: str | None = None,
                          consolidate_threshold: int = 2 << 30,
+                         elastic_max_workers: int = 16,
                          ) -> DecisionWorkflow:
-    """The query's decision workflow (paper Fig. 5): five per-phase nodes.
+    """The query's decision workflow (paper Fig. 5): six per-phase nodes.
 
     ``join`` is late-bound on the scan stage's feedback; ``exchange``,
     ``aggregate`` and ``pipeline`` follow the join *decision* (their
     physical effect brackets the join stage) but await only the scan
-    feedback.
+    feedback. ``elastic`` sizes the worker pool for the join fan-out about
+    to queue — decided last, from the bound join's fan-out and the current
+    pool size (both planted in the profile by the planner), so the
+    simulator and the runtime bind identical sequences.
     """
     wf = DecisionWorkflow(name or f"query[{strategy.name}]")
     wf.add(DecisionNode("scan", scan_decision,
@@ -195,6 +210,8 @@ def build_query_workflow(strategy, name: str | None = None,
     wf.add(DecisionNode("pipeline", pipeline_decision,
                         candidates=("barrier", "pipelined", "fused")),
            depends_on=("exchange",), await_feedback=("scan",))
+    wf.add(elasticity_node(max_workers=elastic_max_workers),
+           depends_on=("join",), await_feedback=("scan",))
     return wf
 
 
@@ -466,6 +483,16 @@ class AdaptiveQueryPlan:
         exchange_d = self.run.decide("exchange")
         aggregate_d = self.run.decide("aggregate")
         pipeline_d = self.run.decide("pipeline")
+        # elasticity: size the worker pool for the join fan-out about to
+        # queue; on backends without a pool (threads, inline) the decision
+        # still binds and is audited, it just has nothing to resize
+        pool_size = getattr(runtime.invoker, "pool_size", None)
+        elastic_d = decide_elastic(
+            self.run, join_fanout(join_d),
+            int(pool_size()) if callable(pool_size) else 0)
+        resize = getattr(runtime.invoker, "resize", None)
+        if callable(resize) and elastic_d.func != "hold":
+            resize(int(elastic_d.scale))
         # consolidated join decisions already carry their packed placement,
         # so the materialization is exactly what the sequence records
         return tail_stages(
@@ -535,6 +562,13 @@ def plan_query_with_workflow(sim, pc, fact, dim, strategy,
     run.decide("exchange")
     run.decide("aggregate")
     run.decide("pipeline")
+    # elasticity, through the same helper as the runtime plane: the sim's
+    # cold-start model (when enabled) pre-warms on "grow" exactly where the
+    # runtime resizes its process pool
+    elastic_d = decide_elastic(run, join_fanout(decision), sim.pool_size()
+                               if hasattr(sim, "pool_size") else 0)
+    if elastic_d.func == "grow" and hasattr(sim, "prewarm"):
+        sim.prewarm(int(elastic_d.scale), app)
     consolidated = bool(decision.extra("consolidate", False))
 
     _submit_sim_tasks(sim, app, dist_f, dist_d, scanned, decision,

@@ -76,10 +76,22 @@ class ClusterSim:
     duration, then releases it and re-enters the ready set (the runtime
     invoker's crash-retry, priced in sim time). ``reexecutions`` counts the
     extra runs.
+
+    Cold-start economics (twin of the ``repro.runtime.workers`` pool,
+    active when ``provision_s > 0``): each task start consumes a warm
+    worker — LIFO, reaped after ``idle_reap_s`` idle — or pays a
+    ``provision_s`` cold start before compute begins. ``prewarm`` (the
+    elasticity decision's grow path) provisions workers up front and bills
+    their cold starts immediately. ``fn_seconds`` is the per-app
+    function-seconds cost proxy matching ``WorkerPool.
+    cost_function_seconds``: busy compute + provision charges, with NIC
+    transfer time excluded (the store bills that separately).
     """
 
     def __init__(self, gc: GlobalController, net_bw: float = DEFAULT_NET_BW,
-                 straggle=None, crash_plan: Mapping[str, int] | None = None):
+                 straggle=None, crash_plan: Mapping[str, int] | None = None,
+                 provision_s: float = 0.0, warm_pool: int = 0,
+                 idle_reap_s: float | None = None):
         self.gc = gc
         self.net_bw = net_bw
         if isinstance(straggle, Mapping):
@@ -102,6 +114,15 @@ class ClusterSim:
         self._events: list = []
         self._counter = itertools.count()
         self._running: dict[str, Claim] = {}
+        # -- cold-start / warm-pool model (inert when provision_s == 0) ----
+        self.provision_s = float(provision_s)
+        self.idle_reap_s = idle_reap_s
+        self._warm: list[float] = [0.0] * int(warm_pool)   # idle-since times
+        self.pool = int(warm_pool)        # provisioned workers (warm + busy)
+        self.cold_starts = 0
+        self.warm_hits = 0
+        self.reaped = 0
+        self.fn_seconds: dict[str, float] = {}
 
     # -- submission ----------------------------------------------------------
 
@@ -112,6 +133,62 @@ class ClusterSim:
     def submit_all(self, tasks: Iterable[SimTask]):
         for t in tasks:
             self.submit(t)
+
+    # -- cold-start / warm-pool model ------------------------------------------
+
+    def pool_size(self) -> int:
+        """Provisioned workers (warm + busy) — the elastic node's input."""
+        return self.pool
+
+    def prewarm(self, target: int, app: str = "query"):
+        """Grow the pool to ``target`` ahead of demand (elastic "grow"):
+        each new worker's provision charge is billed to ``app`` now, so the
+        fan-out that follows leases warm. Shrinking just lowers the idle
+        floor — the reaper retires the surplus as it expires. Inert when
+        cold starts aren't modeled (``provision_s<=0``): the pool must then
+        stay at 0 so ``pool_size()`` matches a pool-less runtime invoker
+        and shared-workflow decision sequences agree across planes."""
+        if self.provision_s <= 0:
+            return
+        grow = int(target) - self.pool
+        for _ in range(max(0, grow)):
+            self.pool += 1
+            self.cold_starts += 1
+            self._warm.append(self.now)
+            if self.provision_s > 0:
+                self.fn_seconds[app] = \
+                    self.fn_seconds.get(app, 0.0) + self.provision_s
+
+    def _reap_idle(self):
+        if self.idle_reap_s is None:
+            return
+        while self._warm and self.now - self._warm[0] > self.idle_reap_s:
+            self._warm.pop(0)
+            self.pool -= 1
+            self.reaped += 1
+
+    def _lease_worker(self, app: str) -> float:
+        """Lease a warm worker (0 extra latency) or cold-start one
+        (``provision_s`` latency, billed to ``app``). Inert when the model
+        is disabled."""
+        if self.provision_s <= 0:
+            return 0.0
+        self._reap_idle()
+        if self._warm:
+            self._warm.pop()          # LIFO: most-recently-idle first
+            self.warm_hits += 1
+            return 0.0
+        self.pool += 1
+        self.cold_starts += 1
+        self.fn_seconds[app] = \
+            self.fn_seconds.get(app, 0.0) + self.provision_s
+        return self.provision_s
+
+    def _return_worker(self):
+        if self.provision_s <= 0:
+            return
+        self._warm.append(self.now)
+        self._reap_idle()
 
     # -- engine ----------------------------------------------------------------
 
@@ -153,6 +230,7 @@ class ClusterSim:
                 except ConflictError:
                     continue
                 ready_at = self._transfer_time(task, node)
+                ready_at += self._lease_worker(task.app)
                 task.started = self.now
                 finish = ready_at + task.duration + \
                     self._straggle_delay(task.name, node)
@@ -161,6 +239,8 @@ class ClusterSim:
                                (finish, next(self._counter), task.name))
                 self.app_cost[task.app] = self.app_cost.get(task.app, 0.0) \
                     + (finish - self.now)
+                self.fn_seconds[task.app] = \
+                    self.fn_seconds.get(task.app, 0.0) + (finish - ready_at)
                 break
         self._sample()
 
@@ -204,11 +284,14 @@ class ClusterSim:
                 self.reexecutions += 1
                 task.started = -1.0
                 self.gc.release(self._running.pop(name))
+                if self.provision_s > 0:
+                    self.pool -= 1    # crashed worker died with its task
                 self._try_start()
                 continue
             task.finished = t
             self.done.add(name)
             self.gc.release(self._running.pop(name))
+            self._return_worker()
             self.app_finish[task.app] = max(
                 self.app_finish.get(task.app, 0.0), t)
             self._try_start()
@@ -216,6 +299,7 @@ class ClusterSim:
         return {
             "completion": dict(self.app_finish),
             "cost_slot_seconds": dict(self.app_cost),
+            "cost_function_seconds": dict(self.fn_seconds),
             "allocation": self.timeline,
         }
 
@@ -223,10 +307,13 @@ class ClusterSim:
 def make_cluster(num_nodes: int, slots: int = DEFAULT_SLOTS,
                  net_bw: float = DEFAULT_NET_BW, straggle=None,
                  crash_plan: Mapping[str, int] | None = None,
+                 provision_s: float = 0.0, warm_pool: int = 0,
+                 idle_reap_s: float | None = None,
                  ) -> tuple[GlobalController, ClusterSim]:
     gc = GlobalController({n: slots for n in range(num_nodes)})
     return gc, ClusterSim(gc, net_bw, straggle=straggle,
-                          crash_plan=crash_plan)
+                          crash_plan=crash_plan, provision_s=provision_s,
+                          warm_pool=warm_pool, idle_reap_s=idle_reap_s)
 
 
 # Runtime physical stage -> simulator task family (the sim plans the query

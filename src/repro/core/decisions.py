@@ -279,6 +279,55 @@ def recovery_node(max_reexec_frac: float = 0.5) -> DecisionNode:
                         candidates=("recompute", "rerun"))
 
 
+def worker_pool_target(fanout: int, pool: int, min_workers: int = 1,
+                       max_workers: int = 16,
+                       tasks_per_worker: int = 4) -> int:
+    """Pure pool-sizing rule shared by the runtime invoker and the cluster
+    simulator (the sharing is what makes elastic decision sequences
+    identical across planes): enough warm workers that the upcoming
+    fan-out queues at most ``tasks_per_worker`` deep per worker, clamped
+    to ``[min_workers, max_workers]``. With no upcoming work the pool
+    shrinks to ``min_workers`` (the warm floor the idle reaper leaves)."""
+    if fanout <= 0:
+        return max(min_workers, 0)
+    want = -(-int(fanout) // max(1, int(tasks_per_worker)))   # ceil div
+    return max(min_workers, min(int(max_workers), want))
+
+
+def elasticity_node(min_workers: int = 1, max_workers: int = 16,
+                    tasks_per_worker: int = 4,
+                    name: str = "elastic") -> DecisionNode:
+    """Elasticity as a decision node: grow or shrink the worker pool from
+    queue pressure — the control-plane half of the process worker plane
+    (``repro.runtime.workers``), in the spirit of Lambada's burst fan-out.
+
+    Context contract (fed by the planner on either plane before the node
+    binds): ``profile["elastic.fanout"]`` — the upcoming stage fan-out
+    (invocations about to queue), ``profile["elastic.pool"]`` — the
+    current worker-pool size (0 on backends without a pool: the decision
+    still binds and is audited, it just has nothing to resize — the same
+    control-plane-invisibility convention as the pipeline node). Decides
+    ``Decision("grow"|"shrink"|"hold", target_pool, schedule)`` where
+    ``scale`` IS the target pool size; ``extras`` carry the sizing inputs
+    so the audit log shows why.
+    """
+
+    def fn(ctx: DecisionContext) -> Decision:
+        fanout = int(ctx.profile.get("elastic.fanout", 0))
+        pool = int(ctx.profile.get("elastic.pool", 0))
+        target = worker_pool_target(fanout, pool, min_workers=min_workers,
+                                    max_workers=max_workers,
+                                    tasks_per_worker=tasks_per_worker)
+        func = "grow" if target > pool else \
+            "shrink" if target < pool else "hold"
+        nodes = tuple(sorted(ctx.node_status.total_slots))
+        return Decision(func, target, Schedule("round-robin", nodes),
+                        extras=(("fanout", fanout), ("pool", pool),
+                                ("tasks_per_worker", tasks_per_worker)))
+
+    return DecisionNode(name, fn, candidates=("grow", "shrink", "hold"))
+
+
 @dataclass
 class Stage:
     """One stage of a decision workflow: a decision node plus downstream

@@ -135,6 +135,23 @@ class Tracer:
             self._stack().pop()
             self.end(sp)
 
+    @contextmanager
+    def adopt(self, span: Span | None):
+        """Adopt another thread's open span as this thread's innermost
+        parent — the cross-thread hand-off for helper threads (prefetch,
+        speculation backups) whose own stack is empty: spans they open
+        while the adoption is active parent to ``span`` instead of landing
+        orphaned. Purely a stack push; the adopted span's timing is not
+        touched."""
+        if not self.enabled or span is None:
+            yield span
+            return
+        self._stack().append(span)
+        try:
+            yield span
+        finally:
+            self._stack().pop()
+
     def record(self, name: str, cat: str, start: float,
                end: float | None = None, trace: str | None = None,
                node: int | None = None, parent=_CURRENT, **attrs,

@@ -25,6 +25,8 @@ from repro.runtime.faults import (  # noqa: F401
     SpeculationPolicy,
     StageLossFault,
     StragglerFault,
+    WorkerKilledError,
+    WorkerKillFault,
 )
 from repro.runtime.lineage import (  # noqa: F401
     LineageLog,
@@ -47,6 +49,10 @@ from repro.runtime.invoker import (  # noqa: F401
     ThreadPoolInvoker,
 )
 from repro.runtime.functions import FUNCTIONS, register  # noqa: F401
+from repro.runtime.workers import (  # noqa: F401
+    ProcessPoolInvoker,
+    WorkerPool,
+)
 from repro.runtime.executor import (  # noqa: F401
     DAGExecutor,
     Runtime,

@@ -424,7 +424,8 @@ class Runtime:
     """The executable serverless substrate: store + invoker + metrics.
 
     ``invoker`` may be an ``Invoker`` instance or one of the backend names
-    ``"inline"`` / ``"threads"``.
+    ``"inline"`` / ``"threads"`` / ``"process"`` (long-lived worker
+    subprocesses — see ``repro.runtime.workers``).
     """
 
     def __init__(self, gc: GlobalController,
@@ -445,6 +446,13 @@ class Runtime:
                 invoker = ThreadPoolInvoker(gc, self.store, self.metrics,
                                             max_workers=max_workers,
                                             batching=batching)
+            elif invoker == "process":
+                # imported lazily: the worker plane pulls multiprocessing
+                # machinery most runtimes never need
+                from repro.runtime.workers import ProcessPoolInvoker
+                invoker = ProcessPoolInvoker(gc, self.store, self.metrics,
+                                             max_workers=max_workers,
+                                             batching=batching)
             else:
                 raise ValueError(f"unknown invoker backend {invoker!r}")
         self.invoker = invoker

@@ -31,6 +31,14 @@ Fault-plan schema
   immediately before its ``on_read``-th read (1-based), leaving lost
   tombstones so the reader raises ``StageLostError`` — the trigger for
   lineage-based recovery.
+* ``WorkerKillFault(stage, index, attempt, times)`` — SIGKILL the worker
+  *subprocess* running a matching invocation mid-body (process-backed
+  invokers only; thread invokers have no process to kill and ignore it).
+  The host surfaces the dead pipe as ``WorkerKilledError`` — a crashed
+  attempt record — and retries on a freshly provisioned worker. Because a
+  worker's writes are buffered worker-side and committed by the host only
+  after the body completes, a killed worker never leaves partial store
+  writes.
 
 All triggers are match-count based (never wall-clock), so a plan replays
 identically under the inline invoker, the thread-pool invoker, and the
@@ -58,6 +66,13 @@ class InjectedFault(RuntimeError):
 class InjectedCrashError(InjectedFault):
     """An invocation was killed by the fault plan; the invoker retries it
     (stateless functions + writer-label overwrite make the retry safe)."""
+
+
+class WorkerKilledError(InjectedCrashError):
+    """A worker subprocess died (SIGKILL, OOM, injected worker-kill) while
+    running an invocation. A subclass of ``InjectedCrashError`` so the
+    invoker's existing crash machinery records it and retries — on a fresh
+    worker, since the dead one's pipe is gone."""
 
 
 class RecoveryError(RuntimeError):
@@ -90,6 +105,19 @@ class StageLossFault:
     on_read: int = 1              # trigger before the k-th get (1-based)
 
 
+@dataclass(frozen=True)
+class WorkerKillFault:
+    stage: str
+    index: int | None = None      # None matches any instance of the stage
+    attempt: int = 0
+    times: int = 1
+    # "body": the worker SIGKILLs itself at its first store read (claim
+    # live, body started, nothing written); "late": after the body ran —
+    # its writes are buffered worker-side and die with it, proving the
+    # no-partial-writes invariant
+    when: str = "body"
+
+
 @dataclass
 class FaultPlan:
     """A declarative, replayable schedule of injected faults."""
@@ -97,6 +125,7 @@ class FaultPlan:
     crashes: list[CrashFault] = field(default_factory=list)
     stragglers: list[StragglerFault] = field(default_factory=list)
     losses: list[StageLossFault] = field(default_factory=list)
+    worker_kills: list[WorkerKillFault] = field(default_factory=list)
 
     @classmethod
     def seeded(cls, seed: int, stages: Sequence[str] = ("scan_fact", "join"),
@@ -134,6 +163,7 @@ class FaultInjector:
         self._crash_fired = [0] * len(plan.crashes)
         self._straggle_fired = [0] * len(plan.stragglers)
         self._loss_fired = [False] * len(plan.losses)
+        self._kill_fired = [0] * len(getattr(plan, "worker_kills", []))
         self._reads: dict[tuple[str, str], int] = {}   # (app, stage) -> gets
         self._store = None
         self.injected: list[tuple[str, str]] = []      # (kind, detail) log
@@ -181,6 +211,26 @@ class FaultInjector:
         if self._match_crash(inv, attempt, "before"):
             raise InjectedCrashError(
                 f"{inv.name}: injected crash before body (attempt {attempt})")
+
+    def match_worker_kill(self, inv: "Invocation",
+                          attempt: int) -> "WorkerKillFault | None":
+        """Consulted by process-backed invokers as they dispatch ``inv`` to
+        a worker: a returned fault means SIGKILL that worker mid-invocation
+        (its ``when`` picks the kill point). Match-count semantics are
+        identical to ``CrashFault`` so a plan replays deterministically."""
+        kills = getattr(self.plan, "worker_kills", [])
+        with self._lock:
+            for i, k in enumerate(kills):
+                if k.stage != inv.stage:
+                    continue
+                if k.index is not None and k.index != inv.index:
+                    continue
+                if k.attempt != attempt or self._kill_fired[i] >= k.times:
+                    continue
+                self._kill_fired[i] += 1
+                self.injected.append(("worker-kill", inv.name))
+                return k
+        return None
 
     def after_body(self, inv: "Invocation", attempt: int) -> None:
         """Runs after the body wrote its outputs, before the claim commits:

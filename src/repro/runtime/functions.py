@@ -28,6 +28,7 @@ Stage-name and partition parameters arrive via ``ctx.params``:
                      dim_partitions | "all", dst, partition, num_groups
     partial_aggregate  src, dst, partition, num_groups
     final_aggregate    src, dst, num_groups
+    cpu_spin         dst, partition [, iters]
 """
 
 from __future__ import annotations
@@ -49,6 +50,24 @@ def register(name: str):
         FUNCTIONS[name] = fn
         return fn
     return deco
+
+
+@register("cpu_spin")
+def cpu_spin(ctx) -> None:
+    """GIL-bound compute stage for the worker-plane benchmarks: a pure
+    Python accumulation loop that holds the interpreter lock for its whole
+    duration, so thread-backed invokers serialize it while process-backed
+    workers run it truly in parallel (``benchmarks/bench_elastic.py``).
+    The result is deterministic in ``(partition, iters)``, so fan-out
+    outputs stay verifiable across backends."""
+    p = ctx.params
+    iters = int(p.get("iters", 100_000))
+    x = int(p["partition"]) + 1
+    acc = 0
+    for i in range(iters):
+        acc = (acc + x * i) % 1_000_003
+    ctx.put(p["dst"], p["partition"],
+            Table({"acc": jnp.asarray([acc], jnp.int32)}))
 
 
 def _empty_joined() -> Table:

@@ -153,15 +153,19 @@ class FnContext:
             store, app, node = self._store, self.app, self.node
 
             def fetch():
-                sources = store.read_sources(app, stage, key[1], node)
-                t0 = time.perf_counter()
-                try:
-                    t = store.get(app, stage, key[1], node)
-                finally:
-                    tr.record(f"prefetch/{stage}/{key[1]}", "store", t0,
-                              trace=app, node=node, parent=parent,
-                              kind="prefetch")
-                return t, sources
+                # the fetch runs on a background thread whose span stack is
+                # empty: adopt the issuing invocation's span so the store's
+                # own get spans parent to it instead of landing orphaned
+                with tr.adopt(parent):
+                    sources = store.read_sources(app, stage, key[1], node)
+                    t0 = time.perf_counter()
+                    try:
+                        t = store.get(app, stage, key[1], node)
+                    finally:
+                        tr.record(f"prefetch/{stage}/{key[1]}", "store", t0,
+                                  trace=app, node=node, parent=parent,
+                                  kind="prefetch")
+                    return t, sources
 
             self._prefetched[key] = PrefetchHandle(fetch)
 
@@ -317,11 +321,24 @@ class Invoker:
                 ) -> list[list[Invocation]]:
         """Coalesce batchable invocations sharing (stage, func, node, app,
         priority) into groups of at most ``max_batch``, preserving
-        first-appearance order; everything else stays a singleton."""
+        first-appearance order; everything else stays a singleton.
+
+        A non-batchable invocation is a sequencing point: it CLOSES every
+        open group, so a later same-key batchable invocation can never be
+        pulled back across it (a group held open across arbitrarily many
+        interleaved non-batchable invocations would let a late member
+        execute at the group's first-appearance position, an unbounded
+        submission-vs-execution reorder). Residual reordering — a batchable
+        invocation coalescing backwards past *batchable* siblings of other
+        keys — is bounded per group by ``max_batch`` members and only ever
+        occurs among map-shaped instances of one ``run_stage`` call, which
+        carry no mutual ordering semantics.
+        """
         groups: list[list[Invocation]] = []
         open_group: dict[tuple, int] = {}
         for inv in invocations:
             if not (self.batching and inv.batchable):
+                open_group.clear()
                 groups.append([inv])
                 continue
             key = (inv.stage, inv.func, inv.node, inv.app, inv.priority)
@@ -332,6 +349,29 @@ class Invoker:
                 open_group[key] = len(groups)
                 groups.append([inv])
         return groups
+
+    # -- function-body execution hook -----------------------------------------
+
+    def _invoke_body(self, fn: Callable[[FnContext], Any], inv: Invocation,
+                     attempt: int) -> FnContext:
+        """Run one function body and return its populated ``FnContext`` —
+        the single extension point a worker-plane backend overrides.
+
+        The default executes ``fn`` in-process. ``ProcessPoolInvoker``
+        (``repro.runtime.workers``) instead ships the invocation to a
+        worker subprocess and replays the worker's buffered writes into the
+        host store before returning, so crash-after-write retry semantics
+        are preserved. Implementations raise ``InjectedCrashError``
+        subclasses (e.g. ``WorkerKilledError``) to surface a dead worker as
+        a crashed attempt with the standard retry machinery.
+        """
+        ctx = FnContext(self.store, inv, honor_plan=self.honor_plan)
+        pad0 = _padding_snapshot()
+        fn(ctx)
+        pad1 = _padding_snapshot()
+        ctx.rows_actual = pad1[0] - pad0[0]
+        ctx.rows_padded = pad1[1] - pad0[1]
+        return ctx
 
     def _execute_group(self, group: list[Invocation],
                        deps: tuple[str, ...]) -> None:
@@ -414,13 +454,7 @@ class Invoker:
                         self.intercept(inv, attempt)
                     if self.injector is not None:
                         self.injector.before_body(inv, attempt)
-                    ctx = FnContext(self.store, inv,
-                                    honor_plan=self.honor_plan)
-                    pad0 = _padding_snapshot()
-                    fn(ctx)
-                    pad1 = _padding_snapshot()
-                    ctx.rows_actual = pad1[0] - pad0[0]
-                    ctx.rows_padded = pad1[1] - pad0[1]
+                    ctx = self._invoke_body(fn, inv, attempt)
                     if self.injector is not None:
                         self.injector.after_body(inv, attempt)
                 except InjectedCrashError as e:
@@ -601,13 +635,7 @@ class Invoker:
                                 self.intercept(inv, attempt)
                             if self.injector is not None:
                                 self.injector.before_body(inv, attempt)
-                            ctx = FnContext(self.store, inv,
-                                            honor_plan=self.honor_plan)
-                            pad0 = _padding_snapshot()
-                            fn(ctx)
-                            pad1 = _padding_snapshot()
-                            ctx.rows_actual = pad1[0] - pad0[0]
-                            ctx.rows_padded = pad1[1] - pad0[1]
+                            ctx = self._invoke_body(fn, inv, attempt)
                             if self.injector is not None:
                                 self.injector.after_body(inv, attempt)
                         except InjectedCrashError:
@@ -750,12 +778,24 @@ class ThreadPoolInvoker(Invoker):
         pool = ThreadPoolExecutor(
             max_workers=min(2 * self.max_workers, 2 * n))
         self._pools.append(pool)
+        tr = get_tracer()
+        stage_span = tr.anchored(
+            ("stage", invocations[0].app, invocations[0].stage))
+
+        def run_one(inv):
+            # pool threads have empty span stacks and losers may outlive
+            # the executor's stage anchor (drain() joins them after
+            # run_stage returns): adopt the stage span captured at submit
+            # time so invocation and store spans stay parented either way
+            with tr.adopt(stage_span):
+                self._execute_one(inv, deps)
+
         futs: dict = {}                       # future -> index
         copies = [1] * n                      # in-flight copies per index
         started = []
         for i, inv in enumerate(invocations):
             started.append(time.perf_counter())
-            futs[pool.submit(self._execute_one, inv, deps)] = i
+            futs[pool.submit(run_one, inv)] = i
         finished: set[int] = set()
         backed: set[int] = set()
         done_s: list[float] = []
@@ -792,7 +832,6 @@ class ThreadPoolInvoker(Invoker):
                     backed.add(i)
                     self.speculations.append(
                         (inv.name, inv.node, node, now - started[i]))
-                    tr = get_tracer()
                     tr.record(f"speculate/{inv.name}", "invoker", now,
                               end=now, trace=inv.app, node=node,
                               parent=tr.anchored(
@@ -800,7 +839,7 @@ class ThreadPoolInvoker(Invoker):
                               kind="speculation", from_node=inv.node,
                               to_node=node, elapsed=now - started[i])
                     backup = replace(inv, node=node)
-                    futs[pool.submit(self._execute_one, backup, deps)] = i
+                    futs[pool.submit(run_one, backup)] = i
                     copies[i] += 1
         finally:
             # first-completion-wins: do NOT wait for losing copies — they

@@ -31,6 +31,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any
 
+from repro.core.decisions import worker_pool_target
 from repro.obs.tracer import get_tracer
 from repro.runtime.invoker import Invocation, SlotGate
 
@@ -274,6 +275,7 @@ class QueryScheduler:
         prev_gate = self.runtime.invoker.gate
         if self.gate is not None:
             self.runtime.invoker.gate = self.gate
+        self._grow_for_queue()
         try:
             window = threading.BoundedSemaphore(self._window())
             threads = []
@@ -290,6 +292,32 @@ class QueryScheduler:
             if self.gate is not None:
                 self.runtime.invoker.gate = prev_gate
         return dict(self.results)
+
+    # admission-time demand estimate: each admitted query immediately fans
+    # out a scan wave at least this many invocations wide
+    QUEUE_TASKS_PER_QUERY = 4
+
+    def _grow_for_queue(self) -> None:
+        """Queue-depth elasticity — the scheduler's half of the elastic
+        control loop (the planner's ``elastic`` decision node is the
+        per-stage half). Before the drivers start, a process-backed
+        invoker is pre-grown for the admission backlog, so the first scan
+        waves lease warm workers instead of paying one cold start each on
+        the queries' critical paths. Sized by the shared
+        ``worker_pool_target`` rule; backends without a pool are left
+        alone. Scale-in is not forced here: the pool's idle reaper (and
+        the per-stage elastic decision) shrink it once the burst drains.
+        """
+        resize = getattr(self.runtime.invoker, "resize", None)
+        pool_size = getattr(self.runtime.invoker, "pool_size", None)
+        if not (callable(resize) and callable(pool_size)) or not self.jobs:
+            return
+        depth = min(self._window(), len(self.jobs))
+        target = worker_pool_target(
+            depth * self.QUEUE_TASKS_PER_QUERY, pool_size(),
+            tasks_per_worker=self.QUEUE_TASKS_PER_QUERY)
+        if target > pool_size():
+            resize(target)
 
     def _run_job(self, job: QueryJob, window: threading.Semaphore) -> None:
         from repro.analytics.query import QueryStrategy, prepare_query_plan

@@ -259,11 +259,15 @@ class ShuffleStore:
         tr = get_tracer()
         t0 = time.perf_counter() if tr.enabled else 0.0
         nbytes, rows = int(table.nbytes), int(table.num_rows)
-        if self.disaggregated and self.net_bw and writer != "seed":
-            time.sleep(nbytes / self.net_bw)
         with self._cond:
             self._put_locked(app, stage, partition, table, node, writer,
                              nbytes, rows)
+        # the emulated disaggregated transfer is charged only AFTER quota
+        # admission succeeds: a write rejected by the quota (or blocked on
+        # eviction) must not pay the transfer once per failed attempt, which
+        # would inflate store_seconds and the critical-path store split
+        if self.disaggregated and self.net_bw and writer != "seed":
+            time.sleep(nbytes / self.net_bw)
         if tr.enabled:
             tr.record(f"put/{stage}", "store", t0, trace=app, node=node,
                       partition=partition, bytes=nbytes)
@@ -286,12 +290,14 @@ class ShuffleStore:
         sized = [(int(p), t, int(t.nbytes), int(t.num_rows))
                  for p, t in sorted(tables.items())]
         total = sum(nb for _, _, nb, _ in sized)
-        if self.disaggregated and self.net_bw and writer != "seed" and total:
-            time.sleep(total / self.net_bw)
         with self._cond:
             for partition, table, nbytes, rows in sized:
                 self._put_locked(app, stage, partition, table, node, writer,
                                  nbytes, rows)
+        # transfer charged after admission (see ``put``): a quota rejection
+        # mid-batch pays nothing for the flow it never completed
+        if self.disaggregated and self.net_bw and writer != "seed" and total:
+            time.sleep(total / self.net_bw)
         if tr.enabled:
             tr.record(f"put_many/{stage}", "store", t0, trace=app, node=node,
                       partitions=len(sized), bytes=total)

@@ -294,6 +294,34 @@ def _map_stage(app, n, node=0):
         for i in range(n)])
 
 
+def test_nonbatchable_interleave_closes_open_groups():
+    """A non-batchable invocation is a sequencing point: it closes every
+    open batch group, so a later same-key batchable invocation can never
+    coalesce backwards across it — pinning execution order to submission
+    order at each interleave."""
+    order = []
+
+    def rec(ctx):
+        order.append(ctx.params["tag"])
+
+    gc = GlobalController({0: 8})
+    ivk = InlineInvoker(gc, ShuffleStore(), MetricsSink(), batching=True)
+    ivk.registry = {"rec": rec}
+
+    def mk(i, batchable):
+        return Invocation(f"q/s/{i}", "q", "s", i, "rec", 0,
+                          params={"tag": i}, batchable=batchable)
+
+    invs = [mk(0, True), mk(1, True), mk(2, False), mk(3, True), mk(4, True)]
+    groups = ivk._groups(invs)
+    # the pre-interleave group stays coalesced; 3 and 4 form a NEW group
+    # after the sequencing point instead of rejoining [0, 1]
+    assert [[i.index for i in g] for g in groups] == [[0, 1], [2], [3, 4]]
+    ivk.run_stage(invs)
+    assert order == [0, 1, 2, 3, 4]
+    assert sum(gc.used.values()) == 0
+
+
 def test_batch_crash_retries_members_individually():
     gc = GlobalController({0: 4})
     store, metrics = ShuffleStore(), MetricsSink()

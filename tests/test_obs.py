@@ -332,6 +332,32 @@ def test_metrics_clear_per_app_and_scheduler_compaction():
     assert res.stages and res.stages["final_agg"].ok == 1
 
 
+def test_no_orphan_store_spans_in_pipelined_run():
+    """Trace integrity across helper threads: a pipelined run issues store
+    reads from ``PrefetchHandle`` background threads, whose spans must
+    parent (via ``Tracer.adopt``) into the spawning invocation — never
+    surface as orphan store-layer roots."""
+    get_tracer().clear()
+    fd, dd, ref = make_dist_tables(seed=11)
+    got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"),
+                                   invoker="threads", pipeline=True)
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    spans = get_tracer().spans("query")
+    assert spans
+    ids = {s.span_id for s in spans}
+    dangling = [s for s in spans if s.parent_id is not None
+                and s.parent_id not in ids]
+    assert not dangling, [s.name for s in dangling]
+    root = next(s for s in spans if s.name == "query/query")
+    # seed-time puts predate the query root and the caller's result fetch
+    # postdates it — both legitimately stay roots; every store span issued
+    # while the query ran must have a parent
+    orphans = [s for s in spans if s.cat == "store"
+               and s.parent_id is None
+               and root.start <= s.start <= root.end]
+    assert not orphans, [s.name for s in orphans]
+
+
 # -- overhead / disabled end-to-end ----------------------------------------------
 
 

@@ -278,6 +278,34 @@ def test_query_completes_under_quota_with_bounded_peak():
     assert rt2.store.evictions
 
 
+def test_disagg_transfer_charged_only_after_quota_admission():
+    """Regression: the emulated disaggregated-transfer sleep is paid only
+    AFTER quota admission succeeds. A fail-fast oversized write must return
+    immediately (no transfer for bytes that were never admitted), and an
+    evict-then-retry admission pays the transfer exactly once — the same
+    charge as a first-try admission of the same blob."""
+    bw = 1000.0                      # bytes/s: a 200-byte blob "moves" in .2s
+    store = ShuffleStore(net_bw=bw, disaggregated=True,
+                         quotas={"a": 250})
+    # fail-fast: delta > quota raises before any transfer is charged
+    t0 = time.perf_counter()
+    with pytest.raises(QuotaExceededError):
+        store.put("a", "s0", 0, FakeTable(400, 4), node=0, writer="w")
+    assert time.perf_counter() - t0 < 0.15
+    # first-try admission: exactly one transfer
+    t0 = time.perf_counter()
+    store.put("a", "s0", 0, FakeTable(200, 2), node=0, writer="w")
+    first = time.perf_counter() - t0
+    store.seal("a", "s0")
+    # evict-then-retry admission: evicts the sealed stage, then pays the
+    # transfer once — accounting identical to the first-try path
+    t0 = time.perf_counter()
+    store.put("a", "s1", 0, FakeTable(200, 2), node=0, writer="w")
+    second = time.perf_counter() - t0
+    assert store.evictions == [("a", "s0", 200)]
+    assert 0.2 <= first < 0.38 and 0.2 <= second < 0.38
+
+
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
 def test_hypothesis_present_marker():
     """Explicit marker so CI logs show whether the property suites really
