@@ -219,7 +219,7 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
     seq_runtime, seq_sim = _run_parity(pool=workers if not smoke else 2)
     parity = seq_runtime == seq_sim
     assert parity, (seq_runtime, seq_sim)
-    assert seq_runtime[-1][0] == "elastic"
+    assert [n for n, _ in seq_runtime[-2:]] == ["elastic", "tiering"]
 
     report = {
         "benchmark": "elastic_worker_plane",

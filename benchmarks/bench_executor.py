@@ -51,7 +51,8 @@ def _make_tables(rows: int, dim_rows: int):
 
 
 def _run_once(fd, dd, strategy: str, barrier: bool,
-              invoker: str = "threads", max_workers: int = 8):
+              invoker: str = "threads", max_workers: int = 8,
+              store_backend: str = "memory"):
     from repro.analytics import QueryStrategy, execute_query_runtime
     from repro.core.controllers import GlobalController
     from repro.runtime import Runtime
@@ -62,7 +63,8 @@ def _run_once(fd, dd, strategy: str, barrier: bool,
     get_tracer().clear()
     gc = GlobalController({n: 8 for n in range(4)})
     runtime = Runtime(gc, invoker=invoker, net_bw=NET_BW,
-                      disaggregated=True, max_workers=max_workers)
+                      disaggregated=True, max_workers=max_workers,
+                      storage=store_backend)
     try:
         t0 = time.perf_counter()
         got, _ = execute_query_runtime(fd, dd, QueryStrategy(strategy),
@@ -72,11 +74,13 @@ def _run_once(fd, dd, strategy: str, barrier: bool,
     finally:
         if invoker == "process":
             runtime.invoker.shutdown()
+        runtime.store.close()       # disk primary: remove the spill tempdir
 
 
 def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
          out_path: Path | str | None = None,
-         invoker: str = "threads", max_workers: int = 8) -> dict:
+         invoker: str = "threads", max_workers: int = 8,
+         store_backend: str = "memory") -> dict:
     import numpy as np
 
     from repro.obs import write_bench_artifacts
@@ -98,7 +102,8 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
             for _ in range(reps):
                 wall, got = _run_once(fd, dd, strat, barrier,
                                       invoker=invoker,
-                                      max_workers=max_workers)
+                                      max_workers=max_workers,
+                                      store_backend=store_backend)
                 np.testing.assert_allclose(got, ref, atol=1e-2)
                 walls.append(wall)
             entry[f"{mode}_s"] = min(walls)
@@ -114,7 +119,8 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
         "invoker": invoker,
         "config": {"rows": n_rows, "dim_rows": n_dim, "nodes": 4,
                    "slots_per_node": 8, "net_bw": NET_BW,
-                   "disaggregated": True, "reps": reps, "smoke": smoke},
+                   "disaggregated": True, "reps": reps, "smoke": smoke,
+                   "store_backend": store_backend},
         "results": results,
         "summary": {"barrier_total_s": barrier_total,
                     "deps_total_s": deps_total,
@@ -148,9 +154,13 @@ if __name__ == "__main__":
                     help="function backend (process: real worker "
                          "subprocesses; cap --max-workers on small hosts)")
     ap.add_argument("--max-workers", type=int, default=8)
+    ap.add_argument("--store-backend", default="memory",
+                    choices=["memory", "disk"],
+                    help="shuffle store primary tier (disk: every blob "
+                         "round-trips through real files in a tempdir)")
     args = ap.parse_args()
     _pin_xla_single_thread()
     main(smoke=args.smoke,
          reps=args.reps if args.reps is not None else (1 if args.smoke else 3),
          out_path=args.out, invoker=args.invoker,
-         max_workers=args.max_workers)
+         max_workers=args.max_workers, store_backend=args.store_backend)

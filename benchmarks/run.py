@@ -2,7 +2,8 @@
 roofline report. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run \
-        [--only fig4|fig7|fig8|roofline|executor|sharing|faults|dataplane]
+        [--only fig4|fig7|fig8|roofline|executor|sharing|faults|dataplane|
+               elastic|tiering]
 """
 
 from __future__ import annotations
@@ -19,6 +20,7 @@ from benchmarks import (
     bench_executor,
     bench_faults,
     bench_sharing,
+    bench_tiering,
     fig4_join,
     fig7_query,
     fig8_sharing,
@@ -30,7 +32,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig4", "fig7", "fig8", "roofline", "executor",
-                             "sharing", "faults", "dataplane", "elastic"])
+                             "sharing", "faults", "dataplane", "elastic",
+                             "tiering"])
     args = ap.parse_args(argv)
 
     sections = {
@@ -43,6 +46,7 @@ def main(argv=None) -> None:
         "faults": bench_faults.main,
         "dataplane": bench_dataplane.main,
         "elastic": bench_elastic.main,
+        "tiering": bench_tiering.main,
     }
     if args.only:
         sections = {args.only: sections[args.only]}

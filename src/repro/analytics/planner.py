@@ -35,6 +35,7 @@ from repro.core.decisions import (
     WorkflowRun,
     elasticity_node,
     partition_skew,
+    tiering_node,
 )
 
 MAX_JOIN_FANOUT = 64      # runtime join bucket-space cap
@@ -121,6 +122,45 @@ def decide_elastic(run: WorkflowRun, fanout: int, pool: int) -> Decision:
     return run.decide("elastic")
 
 
+# rough per-row bytes of a two-phase partial-aggregate bucket (group key +
+# accumulator), used only to *estimate* the partials stage for tiering
+PARTIAL_AGG_ROW_BYTES = 16
+
+
+def ephemeral_stage_profile(scanned: DataDist, dist_b: DataDist,
+                            join: Decision, exchange: Decision,
+                            num_groups: int) -> tuple:
+    """``(stage, est_bytes, lineage_depth, downstream_remaining)`` for each
+    ephemeral data stage the chosen physical plan will reclaim, in reclaim
+    order — the tiering node's sizing input. Every number is derived from
+    the bound plan (estimated scan output, dim distribution, join fan-out),
+    never measured, so the runtime and the simulator price the same
+    stages identically."""
+    n_join = join_fanout(join)
+    partials = PARTIAL_AGG_ROW_BYTES * int(num_groups) * n_join
+    if exchange.func == "shuffle":
+        return (("fact_buckets", int(scanned.size), 2, 2),
+                ("dim_buckets", int(dist_b.size), 2, 2),
+                ("joined", int(scanned.size), 3, 1),
+                ("partials", partials, 4, 0))
+    # broadcast path: the dim broadcast is never reclaimed (no ephemeral
+    # input names it), so only the join output and the partials spill
+    return (("joined", int(scanned.size), 2, 1),
+            ("partials", partials, 3, 0))
+
+
+def decide_tiering(run: WorkflowRun, stages, quota: int | None,
+                   tiers) -> Decision:
+    """Plant the tiering node's context contract — the plan's ephemeral
+    stages, the app's store quota, and the cold-tier specs — and bind it.
+    One helper shared by both planes, so the profile keys (and therefore
+    the bound sequences) cannot drift between simulator and runtime."""
+    run.ctx.profile["tiering.stages"] = tuple(stages)
+    run.ctx.profile["tiering.quota"] = None if quota is None else int(quota)
+    run.ctx.profile["tiering.tiers"] = dict(tiers or {})
+    return run.decide("tiering")
+
+
 def exchange_decision(ctx: DecisionContext) -> Decision:
     """The exchange pattern follows the bound join decision: merge join
     hash-shuffles both sides into the join's bucket space, hash join
@@ -184,15 +224,16 @@ def build_query_workflow(strategy, name: str | None = None,
                          consolidate_threshold: int = 2 << 30,
                          elastic_max_workers: int = 16,
                          ) -> DecisionWorkflow:
-    """The query's decision workflow (paper Fig. 5): six per-phase nodes.
+    """The query's decision workflow (paper Fig. 5): seven per-phase nodes.
 
     ``join`` is late-bound on the scan stage's feedback; ``exchange``,
     ``aggregate`` and ``pipeline`` follow the join *decision* (their
     physical effect brackets the join stage) but await only the scan
     feedback. ``elastic`` sizes the worker pool for the join fan-out about
-    to queue — decided last, from the bound join's fan-out and the current
-    pool size (both planted in the profile by the planner), so the
-    simulator and the runtime bind identical sequences.
+    to queue, and ``tiering`` chooses spill-vs-evict per ephemeral stage
+    of the chosen plan — both decided from plan-derived inputs planted in
+    the profile by the planner, so the simulator and the runtime bind
+    identical sequences.
     """
     wf = DecisionWorkflow(name or f"query[{strategy.name}]")
     wf.add(DecisionNode("scan", scan_decision,
@@ -212,6 +253,8 @@ def build_query_workflow(strategy, name: str | None = None,
            depends_on=("exchange",), await_feedback=("scan",))
     wf.add(elasticity_node(max_workers=elastic_max_workers),
            depends_on=("join",), await_feedback=("scan",))
+    wf.add(tiering_node(),
+           depends_on=("exchange",), await_feedback=("scan",))
     return wf
 
 
@@ -493,6 +536,18 @@ class AdaptiveQueryPlan:
         resize = getattr(runtime.invoker, "resize", None)
         if callable(resize) and elastic_d.func != "hold":
             resize(int(elastic_d.scale))
+        # tiering: price spill-vs-evict for the plan's ephemeral stages
+        # against the store's cold tiers; the bound plan becomes the spill
+        # policy reclaim/eviction consults. Stores without spill backends
+        # (or apps without quotas) bind "keep" — today's behavior
+        store = runtime.store
+        tier_d = decide_tiering(
+            self.run,
+            ephemeral_stage_profile(scanned, self.run.ctx.data_dist["B"],
+                                    join_d, exchange_d, self.num_groups),
+            store.quota(self.app), store.storage_spec())
+        if tier_d.func != "keep":
+            store.set_spill_policy(self.app, dict(tier_d.extra("plan", ())))
         # consolidated join decisions already carry their packed placement,
         # so the materialization is exactly what the sequence records
         return tail_stages(
@@ -529,10 +584,17 @@ def plan_query_with_workflow(sim, pc, fact, dim, strategy,
                              workflow: DecisionWorkflow | None = None,
                              consolidate_threshold: int | None = None,
                              scan_selectivity: float | None = None,
+                             num_groups: int = 64,
+                             storage_spec=None,
+                             store_quota: int | None = None,
                              ) -> WorkflowRun:
     """Plan the TPC-DS-like sub-query into ``sim`` through the decision
     workflow; the scan stage's feedback is *estimated* (exactly, for
-    materialized tables) instead of measured. Returns the ``WorkflowRun``
+    materialized tables) instead of measured. ``storage_spec`` /
+    ``store_quota`` mirror the runtime store's cold-tier specs and app
+    quota into the tiering decision (default: the sim's own
+    ``storage_spec``/``store_quotas`` attributes when set, else no tiers —
+    matching a store without spill backends). Returns the ``WorkflowRun``
     whose decision sequence the submitted tasks materialize."""
     from repro.analytics.simulator import calibrated_rates
 
@@ -559,7 +621,7 @@ def plan_query_with_workflow(sim, pc, fact, dim, strategy,
     run.feedback("scan", {"scan_fact.bytes_out": scanned.size,
                           "scan_fact.estimated": True})
     decision = run.decide("join")
-    run.decide("exchange")
+    exchange_d = run.decide("exchange")
     run.decide("aggregate")
     run.decide("pipeline")
     # elasticity, through the same helper as the runtime plane: the sim's
@@ -569,6 +631,17 @@ def plan_query_with_workflow(sim, pc, fact, dim, strategy,
                                if hasattr(sim, "pool_size") else 0)
     if elastic_d.func == "grow" and hasattr(sim, "prewarm"):
         sim.prewarm(int(elastic_d.scale), app)
+    # tiering, through the same helper and the same plan-derived estimates
+    # as the runtime plane (estimate_scan_output is exact for materialized
+    # tables, so both planes price identical stage profiles)
+    if storage_spec is None:
+        storage_spec = getattr(sim, "storage_spec", None)
+    if store_quota is None:
+        store_quota = (getattr(sim, "store_quotas", None) or {}).get(app)
+    decide_tiering(run,
+                   ephemeral_stage_profile(scanned, dist_d, decision,
+                                           exchange_d, num_groups),
+                   store_quota, storage_spec)
     consolidated = bool(decision.extra("consolidate", False))
 
     _submit_sim_tasks(sim, app, dist_f, dist_d, scanned, decision,

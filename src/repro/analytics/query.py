@@ -166,7 +166,8 @@ def prepare_query_plan(runtime, fact: DistTable, dim: DistTable,
                        pc: PrivateController | None = None,
                        consolidate_threshold: int | None = None,
                        workflow: DecisionWorkflow | None = None,
-                       map_split: int = 1,
+                       map_split: int = 1, seed_tier: str | None = None,
+                       reuse_inputs: bool = False,
                        ) -> tuple[AdaptiveQueryPlan, PrivateController]:
     """Planner entry point for a *named* application on a shared runtime.
 
@@ -181,6 +182,13 @@ def prepare_query_plan(runtime, fact: DistTable, dim: DistTable,
     (``split_partitions``): map stages then run ``map_split`` invocations
     per node, which the invoker's batching coalesces back into one claim
     per node — the vectorized-data-plane benchmark knob.
+
+    ``seed_tier`` ingests the inputs into a cold storage backend (e.g.
+    ``"object"``) instead of memory — the Lambada cold-data scenario:
+    first-touch scans read (and promote) through the emulated object
+    store. ``reuse_inputs=True`` skips seeding when the store already
+    holds the input stages (a warm re-query on the same runtime reads
+    whatever tier the previous run left them in).
     """
     if pc is None:
         pc = PrivateController(app, runtime.gc, priority=priority)
@@ -199,8 +207,14 @@ def prepare_query_plan(runtime, fact: DistTable, dim: DistTable,
         else split_partitions(fact.partitions, map_split)
     dim_parts = dim.partitions if map_split <= 1 \
         else split_partitions(dim.partitions, map_split)
-    fact_layout = runtime.seed(app, "input/fact", fact_parts)
-    dim_layout = runtime.seed(app, "input/dim", dim_parts)
+    if reuse_inputs and runtime.store.stage_layout(app, "input/fact"):
+        fact_layout = runtime.store.stage_layout(app, "input/fact")
+        dim_layout = runtime.store.stage_layout(app, "input/dim")
+    else:
+        fact_layout = runtime.seed(app, "input/fact", fact_parts,
+                                   tier=seed_tier)
+        dim_layout = runtime.seed(app, "input/dim", dim_parts,
+                                  tier=seed_tier)
     plan = AdaptiveQueryPlan(run, app, fact_layout, dim_layout,
                              num_groups=num_groups, priority=pc.priority)
     return plan, pc
@@ -216,7 +230,9 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
                           workflow: DecisionWorkflow | None = None,
                           barrier: bool = False, recovery="lineage",
                           max_recoveries: int = 8, batching: bool = True,
-                          map_split: int = 1, pipeline: bool = False):
+                          map_split: int = 1, pipeline: bool = False,
+                          seed_tier: str | None = None,
+                          reuse_inputs: bool = False):
     """Run the TPC-DS-like sub-query end-to-end on the serverless runtime.
 
     One decision workflow drives the whole query: the scan decision binds
@@ -248,7 +264,7 @@ def execute_query_runtime(fact: DistTable, dim: DistTable,
         runtime, fact, dim, strategy, app=app, priority=priority,
         num_groups=num_groups, pc=pc,
         consolidate_threshold=consolidate_threshold, workflow=workflow,
-        map_split=map_split)
+        map_split=map_split, seed_tier=seed_tier, reuse_inputs=reuse_inputs)
     runtime.execute(plan.initial_stages(), pc=pc, planner=plan,
                     barrier=barrier, recovery=recovery,
                     max_recoveries=max_recoveries, pipeline=pipeline)

@@ -91,9 +91,16 @@ class ClusterSim:
     def __init__(self, gc: GlobalController, net_bw: float = DEFAULT_NET_BW,
                  straggle=None, crash_plan: Mapping[str, int] | None = None,
                  provision_s: float = 0.0, warm_pool: int = 0,
-                 idle_reap_s: float | None = None):
+                 idle_reap_s: float | None = None,
+                 storage_spec: Mapping[str, Mapping] | None = None,
+                 store_quotas: Mapping[str, int] | None = None):
         self.gc = gc
         self.net_bw = net_bw
+        # storage-tier twin: mirrors ShuffleStore.storage_spec() and the
+        # per-app quotas so the tiering decision binds identically to the
+        # runtime plane (empty = a store without spill backends)
+        self.storage_spec = dict(storage_spec or {})
+        self.store_quotas = dict(store_quotas or {})
         if isinstance(straggle, Mapping):
             entries = [(n, d, None, None) for n, d in straggle.items()]
         else:

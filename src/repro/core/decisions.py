@@ -328,6 +328,97 @@ def elasticity_node(min_workers: int = 1, max_workers: int = 16,
     return DecisionNode(name, fn, candidates=("grow", "shrink", "hold"))
 
 
+# spill costs are seconds + dollars; one exchange rate folds them into a
+# single objective ($1 ≈ one cpu-hour of makespan — the serverless duality
+# of paying for time)
+SPILL_DOLLARS_TO_SECONDS = 3600.0
+
+
+def tiering_choice(nbytes: int, reread_p: float, recompute_s: float,
+                   tiers: Mapping[str, Mapping]) -> tuple[str, str | None]:
+    """Pure per-stage tiering rule shared by the runtime planner and the
+    cluster simulator (the sharing is what makes tiering decision
+    sequences identical across planes): for one reclaimable stage of
+    ``nbytes``, compare evict-and-recompute (``reread_p *
+    recompute_s``) against spilling to each cold tier (write now, read
+    back with probability ``reread_p``, request/GB dollars monetized at
+    ``SPILL_DOLLARS_TO_SECONDS``). ``tiers`` maps tier name ->
+    ``StorageBackend.spec()``. Returns ``("spill", tier)`` or
+    ``("evict", None)``; ties break toward evicting (recompute needs no
+    new machinery) then toward the warmer tier."""
+    best = ("evict", None)
+    best_cost = max(0.0, float(reread_p)) * max(0.0, float(recompute_s))
+    for name in sorted(tiers, key=lambda n: (tiers[n].get("order", 99), n)):
+        spec = tiers[name]
+        lat = float(spec.get("latency_s") or 0.0)
+        write_bw = spec.get("write_bw")
+        read_bw = spec.get("read_bw")
+        write_s = lat + (nbytes / write_bw if write_bw else 0.0)
+        read_s = lat + (nbytes / read_bw if read_bw else 0.0)
+        dollars = (float(spec.get("cost_per_request") or 0.0) * 2
+                   + 2 * nbytes * float(spec.get("cost_per_gb") or 0.0)
+                   / 1e9)
+        cost = write_s + reread_p * read_s \
+            + dollars * SPILL_DOLLARS_TO_SECONDS
+        if cost < best_cost:
+            best, best_cost = ("spill", name), cost
+    return best
+
+
+def tiering_node(loss_rate: float = 0.05, recompute_bw: float = 32e6,
+                 name: str = "tiering") -> DecisionNode:
+    """Storage tiering as a decision node: choose, per reclaimable shuffle
+    stage, whether quota pressure should *spill* it to a colder backend or
+    *evict* it and lean on lineage recompute — the graceful-degradation
+    answer to ServerMix's ephemeral-storage tension.
+
+    Context contract (fed by the planner on either plane before the node
+    binds): ``profile["tiering.stages"]`` — tuple of ``(stage,
+    est_bytes, lineage_depth, downstream_remaining)`` per ephemeral data
+    stage of the chosen physical plan; ``profile["tiering.quota"]`` — the
+    app's store quota (None = unlimited); ``profile["tiering.tiers"]`` —
+    cold-tier specs (``ShuffleStore.storage_spec()``; empty on stores
+    without spill backends). With no quota or no cold tiers the node
+    decides ``keep`` — today's behavior, byte-identical on both planes.
+
+    Per stage, re-read probability grows with the downstream stages still
+    to run (``loss_rate`` per consumer — more future readers, more
+    chances a fault or speculation replay re-pulls it) and recompute cost
+    scales with lineage depth at an effective ``recompute_bw`` bytes/s
+    (recomputing a deep stage replays its whole producer chain). Both
+    inputs are plan-derived, never measured, so runtime and simulator
+    price identically. Decides ``Decision("spill"|"evict"|"keep",
+    n_spilled, schedule)``; ``extras["plan"]`` carries the per-stage
+    choices (``tier`` name or ``"evict"``) the planner installs via
+    ``ShuffleStore.set_spill_policy``.
+    """
+
+    def fn(ctx: DecisionContext) -> Decision:
+        stages = tuple(ctx.profile.get("tiering.stages", ()))
+        quota = ctx.profile.get("tiering.quota")
+        tiers = dict(ctx.profile.get("tiering.tiers") or {})
+        nodes = tuple(sorted(ctx.node_status.total_slots))
+        sched = Schedule("round-robin", nodes)
+        if quota is None or not tiers or not stages:
+            return Decision("keep", 0, sched, extras=(("plan", ()),))
+        plan = []
+        spilled = 0
+        for stage, nbytes, depth, remaining in stages:
+            p = min(1.0, loss_rate * (1 + int(remaining)))
+            recompute_s = max(1, int(depth)) * int(nbytes) / recompute_bw
+            func, tier = tiering_choice(int(nbytes), p, recompute_s, tiers)
+            if func == "spill":
+                spilled += 1
+                plan.append((stage, tier))
+            else:
+                plan.append((stage, "evict"))
+        func = "spill" if spilled else "evict"
+        return Decision(func, spilled, sched,
+                        extras=(("plan", tuple(plan)),))
+
+    return DecisionNode(name, fn, candidates=("spill", "evict", "keep"))
+
+
 @dataclass
 class Stage:
     """One stage of a decision workflow: a decision node plus downstream

@@ -9,6 +9,13 @@ back into the decision workflows and optionally replayed into the cluster
 simulator so both data planes share one plan.
 """
 
+from repro.runtime.storage import (  # noqa: F401
+    DiskBackend,
+    MemoryBackend,
+    ObjectStoreBackend,
+    StorageBackend,
+    make_backend,
+)
 from repro.runtime.store import (  # noqa: F401
     Blob,
     QuotaExceededError,

@@ -433,10 +433,17 @@ class Runtime:
                  store: ShuffleStore | None = None,
                  metrics: MetricsSink | None = None, max_workers: int = 8,
                  net_bw: float | None = None, disaggregated: bool = False,
-                 batching: bool = True):
+                 batching: bool = True, storage="memory",
+                 spill_backends=None):
         self.gc = gc
+        # ``storage`` picks the store's primary backend (name or
+        # StorageBackend instance); ``spill_backends`` adds colder tiers
+        # the tiering decision may demote sealed stages into. Both are
+        # ignored when an explicit ``store`` is supplied.
         self.store = store or ShuffleStore(net_bw=net_bw,
-                                           disaggregated=disaggregated)
+                                           disaggregated=disaggregated,
+                                           backend=storage,
+                                           spill_backends=spill_backends)
         self.metrics = metrics or MetricsSink()
         if isinstance(invoker, str):
             if invoker == "inline":
@@ -460,12 +467,14 @@ class Runtime:
         self.recoveries: list[RecoveryEvent] = []
 
     def seed(self, app: str, stage: str, partitions,
-             ) -> list[tuple[int, int]]:
+             tier: str | None = None) -> list[tuple[int, int]]:
         """Load base data (``{node: table}`` or ``[(node, table), ...]`` for
-        several partitions per node) into the store; returns the
-        ``[(partition, home_node), ...]`` layout the planner places against.
+        several partitions per node) into the store; ``tier`` seeds
+        straight into a cold backend (the Lambada cold-data scenario).
+        Returns the ``[(partition, home_node), ...]`` layout the planner
+        places against.
         """
-        return self.store.ingest(app, stage, partitions)
+        return self.store.ingest(app, stage, partitions, tier=tier)
 
     def execute(self, stages: Sequence[RuntimeStage],
                 pc: PrivateController | None = None,

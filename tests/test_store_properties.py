@@ -10,9 +10,15 @@ accounting invariants hold at every step:
     every byte a reader is charged was either local or counted exactly once
     against its source node's ``sent_bytes`` and the global cross-node total
 
+The base interleaving suite runs once per *primary* storage backend
+(memory / disk / emulated object store — accounting is medium-agnostic),
+and a tiered variant adds demote (spill), promote-on-read, and stage-loss
+operations with per-tier byte conservation and tombstone invariants.
+
 The quota tests (plain pytest, always run) cover eviction of sealed stages,
 blocking admission backpressure, the timeout error, and a whole query
-executing under a quota with peak-footprint bounding.
+executing under a quota with peak-footprint bounding, plus regressions for
+batch-write atomicity, eviction targeting, and replace-path admission.
 """
 
 import threading
@@ -22,7 +28,8 @@ import pytest
 
 from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
 
-from repro.runtime import QuotaExceededError, ShuffleStore, StageLostError
+from repro.runtime import (DiskBackend, ObjectStoreBackend,
+                           QuotaExceededError, ShuffleStore, StageLostError)
 
 
 class FakeTable:
@@ -58,11 +65,37 @@ ops_strategy = st.lists(st.one_of(op_put, op_delete, op_clear, op_seal,
                                   op_get),
                         max_size=80)
 
+# primary backends the base suite must hold on identically: accounting is
+# medium-agnostic, only the payload's resting place differs
+BACKENDS = ("memory", "disk", "object")
 
-@settings(deadline=None)
-@given(ops=ops_strategy)
-def test_store_accounting_invariants_under_interleavings(ops):
-    store = ShuffleStore()
+
+def _make_store(backend: str, **kw) -> ShuffleStore:
+    """A store whose *primary* tier is ``backend``. The object tier is
+    built with zeroed latency/bandwidth/cost so property runs stay
+    instantaneous; disk uses a real tempdir (closed by the caller)."""
+    if backend == "object":
+        return ShuffleStore(backend=ObjectStoreBackend(
+            latency_s=0.0, bw=None, cost_per_request=0.0, cost_per_gb=0.0),
+            **kw)
+    return ShuffleStore(backend=backend, **kw)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_store_accounting_invariants_under_interleavings(backend):
+    @settings(deadline=None)
+    @given(ops=ops_strategy)
+    def prop(ops):
+        store = _make_store(backend)
+        try:
+            _check_accounting_interleaving(store, ops)
+        finally:
+            store.close()
+
+    prop()
+
+
+def _check_accounting_interleaving(store: ShuffleStore, ops) -> None:
     # model: (app, stage) -> partition -> writer -> (nbytes, node)
     model: dict = {}
     total_read = 0          # every byte charged to any reader
@@ -123,6 +156,141 @@ def test_store_accounting_invariants_under_interleavings(ops):
         assert sum(store.read_bytes.values()) == total_read
         assert sum(store.sent_bytes.values()) == total_remote
         assert store.cross_node_bytes == total_remote
+
+
+# -- tiered interleavings: demotion / promotion / loss ------------------------
+
+TIERS = ("disk", "object")
+
+op_demote = st.tuples(st.just("demote"), st.sampled_from(APPS),
+                      st.sampled_from(STAGES), st.sampled_from(TIERS))
+op_lose = st.tuples(st.just("lose"), st.sampled_from(APPS),
+                    st.sampled_from(STAGES))
+tier_ops_strategy = st.lists(st.one_of(op_put, op_delete, op_seal, op_get,
+                                       op_demote, op_lose),
+                             max_size=80)
+
+
+def _make_tiered_store() -> ShuffleStore:
+    return ShuffleStore(spill_backends=[
+        DiskBackend(),
+        ObjectStoreBackend(latency_s=0.0, bw=None,
+                           cost_per_request=0.0, cost_per_gb=0.0)])
+
+
+@settings(deadline=None)
+@given(ops=tier_ops_strategy)
+def test_tiered_invariants_across_demote_promote_interleavings(ops):
+    """Byte conservation, quota accounting, and tombstone invariants hold
+    across arbitrary interleavings of writes, spills to colder tiers,
+    promote-on-read (no quota: every cold read promotes), stage loss, and
+    teardown: hot bytes live in resident/app accounting, cold bytes in
+    ``tier_bytes``, and every blob is in exactly one of the two."""
+    store = _make_tiered_store()
+    try:
+        _check_tiered_interleaving(store, ops)
+    finally:
+        store.close()
+
+
+def _check_tiered_interleaving(store: ShuffleStore, ops) -> None:
+    try:
+        # model: (app, stage) -> part -> writer -> (nbytes, node, tier)
+        model: dict = {}
+        lost: dict = {}          # (app, stage) -> tombstoned partition ids
+        total_read = 0
+        total_remote = 0
+        for op in ops:
+            if op[0] == "put":
+                _, app, stage, part, writer, nbytes, node = op
+                store.put(app, stage, part, FakeTable(nbytes, 1), node,
+                          writer=writer)
+                model.setdefault((app, stage), {}).setdefault(
+                    part, {})[writer] = (nbytes, node, "memory")
+                lost.get((app, stage), set()).discard(part)   # put heals
+            elif op[0] == "delete":
+                _, app, stage = op
+                freed = store.delete_stage(app, stage)
+                parts = model.pop((app, stage), {})
+                lost.pop((app, stage), None)
+                assert freed == sum(b for blobs in parts.values()
+                                    for b, _, _ in blobs.values())
+            elif op[0] == "seal":
+                _, app, stage = op
+                store.seal(app, stage)
+            elif op[0] == "demote":
+                _, app, stage, tier = op
+                hot = sum(b for blobs in model.get((app, stage), {}).values()
+                          for b, _, t in blobs.values() if t == "memory")
+                freed = store.demote_stage(app, stage, tier)
+                assert freed == hot      # only hot blobs spill
+                for blobs in model.get((app, stage), {}).values():
+                    for w, (b, n, t) in list(blobs.items()):
+                        if t == "memory":
+                            blobs[w] = (b, n, tier)
+            elif op[0] == "lose":
+                _, app, stage = op
+                freed = store.lose_stage(app, stage)
+                parts = model.pop((app, stage), {})
+                # loss frees hot AND cold payloads (a lost spilled stage
+                # recovers via lineage like any other)
+                assert freed == sum(b for blobs in parts.values()
+                                    for b, _, _ in blobs.values())
+                if parts:
+                    lost.setdefault((app, stage), set()).update(parts)
+            else:   # get
+                _, app, stage, part, reader = op
+                blobs = model.get((app, stage), {}).get(part, {})
+                if not blobs and part in lost.get((app, stage), set()):
+                    with pytest.raises(StageLostError):
+                        store.get(app, stage, part, node=reader)
+                else:
+                    got = store.get(app, stage, part, node=reader)
+                    if not blobs:
+                        assert got is None
+                    else:
+                        assert got.nbytes == \
+                            sum(b for b, _, _ in blobs.values())
+                        total_read += got.nbytes
+                        # only hot blobs are node-to-node traffic; cold
+                        # reads are backend traffic
+                        total_remote += sum(b for b, n, t in blobs.values()
+                                            if t == "memory" and n != reader)
+                        # no quota: every cold slice read promotes to hot
+                        for w, (b, n, t) in list(blobs.items()):
+                            blobs[w] = (b, n, "memory")
+
+            # -- invariants after every operation -----------------------------
+            hot_per_node: dict = {}
+            hot_per_app: dict = {}
+            cold: dict = {}      # tier -> app -> bytes
+            for (app_k, _), parts in model.items():
+                for blobs in parts.values():
+                    for b, n, t in blobs.values():
+                        if t == "memory":
+                            hot_per_node[n] = hot_per_node.get(n, 0) + b
+                            hot_per_app[app_k] = \
+                                hot_per_app.get(app_k, 0) + b
+                        else:
+                            per = cold.setdefault(t, {})
+                            per[app_k] = per.get(app_k, 0) + b
+            assert all(v >= 0 for v in store.resident_bytes.values())
+            assert {n: v for n, v in store.resident_bytes.items() if v} == \
+                hot_per_node
+            assert {a: v for a, v in store.app_bytes.items() if v} == \
+                hot_per_app
+            assert all(v >= 0 for per in store.tier_bytes.values()
+                       for v in per.values())
+            got_cold = {t: {a: v for a, v in per.items() if v}
+                        for t, per in store.tier_bytes.items()}
+            assert {t: per for t, per in got_cold.items() if per} == cold
+            assert sum(store.read_bytes.values()) == total_read
+            assert sum(store.sent_bytes.values()) == total_remote
+            assert store.cross_node_bytes == total_remote
+            for key_k, parts_k in lost.items():
+                assert store.lost_partitions(*key_k) == parts_k
+    finally:
+        store.close()
 
 
 @settings(deadline=None)
@@ -213,6 +381,98 @@ def test_quota_retry_overwrite_charges_delta_not_sum():
     store.put("app", "s", 0, FakeTable(90, 1), node=0, writer="w")
     assert store.app_bytes["app"] == 90
     assert store.peak_bytes["app"] == 90
+
+
+def test_put_many_refused_batch_commits_nothing():
+    """Regression: a quota refusal mid-batch must not leave the earlier
+    partitions of the batch committed — admission covers the batch *total*
+    up front, so a failed ``put_many`` is invisible (no partial commits,
+    no tombstones, accounting untouched)."""
+    store = ShuffleStore(quotas={"app": 100}, quota_timeout=0.05)
+    store.put("app", "held", 0, FakeTable(60, 1), node=0, writer="w")
+    with pytest.raises(QuotaExceededError):
+        # 30 + 30 = 60 > the 40 bytes of headroom; per-slice admission
+        # would commit partition 0 before failing on partition 1
+        store.put_many("app", "batch", {0: FakeTable(30, 1),
+                                        1: FakeTable(30, 1)},
+                       node=0, writer="w")
+    assert store.partitions("app", "batch") == []
+    assert store.lost_partitions("app", "batch") == set()
+    assert store.app_bytes["app"] == 60
+    assert store.resident_bytes[0] == 60
+
+
+def test_put_many_oversized_batch_fails_fast():
+    """A batch whose total can never fit fails fast even though every
+    individual slice would fit — no trickle-in, no quota_timeout pin."""
+    store = ShuffleStore(quotas={"app": 100}, quota_timeout=10.0)
+    t0 = time.monotonic()
+    with pytest.raises(QuotaExceededError, match="can never fit"):
+        store.put_many("app", "batch", {0: FakeTable(60, 1),
+                                        1: FakeTable(60, 1)},
+                       node=0, writer="w")
+    assert time.monotonic() - t0 < 1.0
+    assert store.partitions("app", "batch") == []
+    assert store.app_bytes.get("app", 0) == 0
+
+
+def test_eviction_never_targets_the_write_destination():
+    """Regression: a sealed-then-rewritten stage must not evict *itself*
+    to admit the new slice — that would tombstone peer writers' committed
+    partitions of the very stage being written. With nothing else sealed
+    the write times out; the destination's data survives untouched."""
+    store = ShuffleStore(quotas={"app": 100}, quota_timeout=0.05)
+    store.put("app", "dest", 0, FakeTable(80, 1), node=0, writer="w0")
+    store.seal("app", "dest")          # consumed once, now being rewritten
+    with pytest.raises(QuotaExceededError):
+        store.put("app", "dest", 1, FakeTable(40, 1), node=0, writer="w1")
+    assert store.evictions == []
+    assert store.lost_partitions("app", "dest") == set()
+    assert store.get("app", "dest", 0, node=0).nbytes == 80
+
+
+def test_eviction_reclaims_other_sealed_stage_not_destination():
+    store = ShuffleStore(quotas={"app": 100}, quota_timeout=0.05)
+    store.put("app", "other", 0, FakeTable(50, 1), node=0, writer="w")
+    store.put("app", "dest", 0, FakeTable(30, 1), node=0, writer="w")
+    store.seal("app", "other")
+    store.seal("app", "dest")
+    # 40 more bytes need 20 of headroom: "other" is evicted, never "dest"
+    store.put("app", "dest", 1, FakeTable(40, 1), node=0, writer="w")
+    assert store.evictions == [("app", "other", 50)]
+    assert store.get("app", "dest", 0, node=0).nbytes == 30
+    assert store.app_bytes["app"] == 70
+
+
+def test_admit_fail_fast_reports_write_size_and_net_delta():
+    """Regression: the fail-fast error used to report only the raw write
+    size; on the replace path the *net delta* (after retracting the
+    replaced slice) is what the quota actually refused. Both appear."""
+    store = ShuffleStore(quotas={"app": 100}, quota_timeout=10.0)
+    store.put("app", "s", 0, FakeTable(40, 1), node=0, writer="w")
+    t0 = time.monotonic()
+    with pytest.raises(QuotaExceededError, match="can never fit") as ei:
+        store.put("app", "s", 0, FakeTable(150, 1), node=0, writer="w")
+    assert time.monotonic() - t0 < 1.0
+    msg = str(ei.value)
+    assert "150" in msg and "110" in msg     # raw size and net delta
+    # the refused replace left the original slice in place
+    assert store.app_bytes["app"] == 40
+    assert store.get("app", "s", 0, node=0).nbytes == 40
+
+
+def test_replace_admitted_on_delta_when_nbytes_exceeds_quota():
+    """The replace path admits on the net delta: a shrinking rewrite is
+    admitted instantly even though its raw size exceeds the quota and the
+    app is already over the cap (lowered after the original write)."""
+    store = ShuffleStore(quota_timeout=0.05)
+    store.put("app", "s", 0, FakeTable(150, 1), node=0, writer="w")
+    store.set_quota("app", 100)
+    # delta is -30: admitted without blocking, raising, or evicting
+    store.put("app", "s", 0, FakeTable(120, 1), node=0, writer="w")
+    assert store.app_bytes["app"] == 120
+    assert store.peak_bytes["app"] == 150
+    assert store.evictions == []
 
 
 def test_quota_is_per_app():

@@ -1,0 +1,396 @@
+"""Tiered shuffle storage: backends, the tiering decision node, spill /
+promote through a full query, lineage recovery with spilled inputs, the
+cold-data (object-store-seeded) scenario, and cross-plane decision parity.
+
+The contract under test: byte-identical query results on every primary
+backend (memory / disk / emulated object store), a seventh ``tiering``
+decision node that chooses spill-vs-evict per reclaimable stage from
+plan-derived inputs only (so runtime and simulator bind identical
+sequences), demotion that keeps sealed stages readable instead of
+tombstoning them, transparent promotion on read, and dollar-cost billing
+for the priced object tier.
+"""
+
+import numpy as np
+import pytest
+
+from repro.analytics import (
+    QueryStrategy,
+    Table,
+    execute_query_runtime,
+    synth_query_tables,
+)
+from repro.analytics.planner import (
+    build_query_workflow,
+    ephemeral_stage_profile,
+    plan_query_with_workflow,
+)
+from repro.analytics.simulator import ClusterSim
+from repro.core.controllers import GlobalController, PrivateController
+from repro.core.decisions import (
+    DecisionContext,
+    NodeStatus,
+    tiering_choice,
+    tiering_node,
+)
+from repro.runtime import (
+    DiskBackend,
+    FaultInjector,
+    FaultPlan,
+    MemoryBackend,
+    ObjectStoreBackend,
+    Runtime,
+    ShuffleStore,
+    StageLossFault,
+    make_backend,
+)
+from repro.runtime.storage import deserialize_table, serialize_table
+
+
+class PickleTable:
+    """Module-level duck-typed table so the pickle fallback roundtrips."""
+
+    def __init__(self, nbytes: int, rows: int):
+        self.nbytes = nbytes
+        self.num_rows = rows
+
+    def concat(self, other: "PickleTable") -> "PickleTable":
+        return PickleTable(self.nbytes + other.nbytes,
+                           self.num_rows + other.num_rows)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return synth_query_tables(4096, 512, seed=1)
+
+
+def _cheap_object_backend(**over):
+    kw = dict(latency_s=0.0, bw=None, cost_per_request=0.0, cost_per_gb=0.0)
+    kw.update(over)
+    return ObjectStoreBackend(**kw)
+
+
+# -- backend unit tests ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("factory", [MemoryBackend, DiskBackend,
+                                     _cheap_object_backend])
+def test_backend_bytes_api_roundtrip(factory):
+    b = factory()
+    try:
+        b.put("a/s/0/w", b"\x00\x01payload")
+        b.put("a/s/1/w", b"other")
+        assert b.get("a/s/0/w") == b"\x00\x01payload"
+        assert b.list("a/s/") == ["a/s/0/w", "a/s/1/w"]
+        assert b.list("a/s/1") == ["a/s/1/w"]
+        b.delete("a/s/0/w")
+        b.delete("a/s/0/w")          # idempotent
+        with pytest.raises(KeyError):
+            b.get("a/s/0/w")
+        assert b.list() == ["a/s/1/w"]
+    finally:
+        b.close()
+
+
+def test_disk_backend_owns_and_removes_its_tempdir():
+    b = DiskBackend()
+    root = b.root
+    b.put("k", b"x")
+    assert root.exists() and any(root.iterdir())
+    b.close()
+    assert not root.exists()
+
+
+def test_disk_backend_leaves_external_root_alone(tmp_path):
+    b = DiskBackend(root=tmp_path)
+    b.put("k", b"x")
+    b.close()
+    assert tmp_path.exists()         # caller-owned directory survives close
+
+
+def test_serialize_roundtrips_table_and_slice():
+    t = Table({"k": np.arange(8, dtype=np.int32),
+               "v": np.linspace(0.0, 1.0, 8, dtype=np.float32)})
+    got = deserialize_table(serialize_table(t))
+    for col in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(got[col]),
+                                      np.asarray(t[col]))
+    # a lazy slice view materializes into the payload
+    got_slice = deserialize_table(serialize_table(t.slice(2, 6)))
+    np.testing.assert_array_equal(np.asarray(got_slice["k"]),
+                                  np.arange(2, 6, dtype=np.int32))
+
+
+def test_serialize_pickle_fallback_for_duck_typed_tables():
+    got = deserialize_table(serialize_table(PickleTable(64, 3)))
+    assert (got.nbytes, got.num_rows) == (64, 3)
+    with pytest.raises(ValueError, match="magic"):
+        deserialize_table(b"XXXXjunk")
+
+
+def test_make_backend_resolves_names_and_instances():
+    assert make_backend("memory").tier == "memory"
+    assert make_backend("disk").tier == "disk"
+    inst = _cheap_object_backend()
+    assert make_backend(inst) is inst
+    with pytest.raises(ValueError, match="unknown storage backend"):
+        make_backend("tape")
+
+
+def test_object_store_pricing_model():
+    b = ObjectStoreBackend(latency_s=0.01, bw=100e6,
+                           cost_per_request=4e-7, cost_per_gb=0.01)
+    assert b.io_seconds(100e6) == pytest.approx(0.01 + 1.0)
+    assert b.request_cost(1e9) == pytest.approx(4e-7 + 0.01)
+    spec = b.spec()
+    assert spec["tier"] == "object" and spec["order"] == 2
+    assert spec["cost_per_gb"] == 0.01
+
+
+# -- the tiering decision rule and node --------------------------------------------
+
+
+def test_tiering_choice_spills_to_disk_when_reread_likely():
+    disk = DiskBackend().spec()
+    # 100 KB stage, deep lineage, likely re-read: disk write+read is far
+    # cheaper than replaying the producer chain
+    func, tier = tiering_choice(100_000, reread_p=0.5,
+                                recompute_s=0.1, tiers={"disk": disk})
+    assert (func, tier) == ("spill", "disk")
+
+
+def test_tiering_choice_evicts_when_recompute_is_free():
+    disk = DiskBackend().spec()
+    func, tier = tiering_choice(100_000, reread_p=0.0,
+                                recompute_s=0.0, tiers={"disk": disk})
+    assert (func, tier) == ("evict", None)
+
+
+def test_tiering_choice_dollars_penalize_the_object_tier():
+    # per-request dollars monetized into seconds make the priced object
+    # tier lose to both eviction-with-cheap-recompute and local disk
+    obj = ObjectStoreBackend().spec()
+    disk = DiskBackend().spec()
+    func, tier = tiering_choice(10_000, reread_p=0.2, recompute_s=1e-4,
+                                tiers={"object": obj})
+    assert func == "evict"
+    func, tier = tiering_choice(10_000, reread_p=0.2, recompute_s=1.0,
+                                tiers={"object": obj, "disk": disk})
+    assert (func, tier) == ("spill", "disk")
+
+
+def _bind_tiering(profile):
+    node = tiering_node()
+    ctx = DecisionContext(profile=profile,
+                          node_status=NodeStatus(total_slots={0: 8, 1: 8}))
+    return node.fn(ctx)
+
+
+def test_tiering_node_keeps_without_quota_or_tiers():
+    stages = (("joined", 100_000, 3, 1),)
+    tiers = {"disk": DiskBackend().spec()}
+    for profile in (
+            {"tiering.stages": stages, "tiering.quota": None,
+             "tiering.tiers": tiers},
+            {"tiering.stages": stages, "tiering.quota": 1 << 20,
+             "tiering.tiers": {}},
+            {"tiering.stages": (), "tiering.quota": 1 << 20,
+             "tiering.tiers": tiers}):
+        d = _bind_tiering(profile)
+        assert d.func == "keep" and d.extra("plan", None) == ()
+
+
+def test_tiering_node_plans_per_stage():
+    d = _bind_tiering({
+        "tiering.stages": (("joined", 1 << 20, 3, 1),
+                           ("partials", 256, 4, 0)),
+        "tiering.quota": 1 << 20,
+        "tiering.tiers": {"disk": DiskBackend().spec()}})
+    plan = dict(d.extra("plan", ()))
+    # the megabyte-deep stage spills; the tiny partials are cheaper to
+    # recompute than to write out
+    assert plan["joined"] == "disk"
+    assert plan["partials"] == "evict"
+    assert d.func == "spill" and d.scale == 1
+
+
+# -- oracle equality on every primary backend --------------------------------------
+
+
+def _primary(name: str):
+    return _cheap_object_backend() if name == "object" else name
+
+
+@pytest.mark.parametrize("backend", ["disk", "object"])
+def test_query_oracle_equal_on_cold_primary_backend(tables, backend):
+    fd, dd, ref = tables
+    gc = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc, storage=_primary(backend))
+    try:
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"),
+                                       runtime=rt)
+        np.testing.assert_allclose(got, ref, atol=1e-3)
+        assert sum(gc.used.values()) == 0
+    finally:
+        rt.store.close()
+
+
+@pytest.mark.parametrize("backend", ["disk", "object"])
+def test_query_recovers_from_stage_loss_on_cold_primary(tables, backend):
+    fd, dd, ref = tables
+    gc = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc, storage=_primary(backend))
+    try:
+        FaultInjector(FaultPlan(losses=[
+            StageLossFault("joined", partitions=(0,), on_read=1)
+        ])).install(rt)
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"),
+                                       runtime=rt)
+        np.testing.assert_allclose(got, ref, atol=1e-3)
+        assert len(rt.recoveries) == 1
+        assert rt.recoveries[0].lost_stage == "joined"
+    finally:
+        rt.store.close()
+
+
+# -- spill integration: quota + cold tiers through a full query --------------------
+
+
+def _unconstrained_peak(tables, strategy="static_merge") -> int:
+    fd, dd, ref = tables
+    got, rt = execute_query_runtime(fd, dd, QueryStrategy(strategy))
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+    return rt.store.peak_bytes["query"]
+
+
+def test_quota_with_spill_backends_demotes_instead_of_tombstoning(tables):
+    fd, dd, ref = tables
+    quota = _unconstrained_peak(tables)
+    gc = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc, spill_backends=[DiskBackend()])
+    rt.store.set_quota("query", quota)
+    wf = build_query_workflow(QueryStrategy("static_merge"))
+    try:
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"),
+                                       runtime=rt, workflow=wf)
+        np.testing.assert_allclose(got, ref, atol=1e-3)
+        tiering = dict(wf.last_run.sequence)["tiering"]
+        assert tiering.func == "spill"
+        plan = dict(tiering.extra("plan", ()))
+        assert "disk" in plan.values()
+        # reclaimed stages with a spill policy were demoted, not tombstoned
+        assert rt.store.demotions
+        assert {s for _, s, _, _ in rt.store.demotions} <= set(plan)
+        assert rt.store.peak_bytes["query"] <= quota
+    finally:
+        rt.store.close()
+
+
+def test_lost_stage_recovers_through_spilled_inputs(tables):
+    """PR-4 fault plans still hold with tiering: losing the partials after
+    the join output was reclaimed-and-spilled recovers via lineage — the
+    recompute reads the demoted 'joined' through the disk backend instead
+    of replaying the whole producer chain."""
+    fd, dd, ref = tables
+    quota = _unconstrained_peak(tables)
+    gc = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc, spill_backends=[DiskBackend()])
+    rt.store.set_quota("query", quota)
+    try:
+        FaultInjector(FaultPlan(losses=[
+            StageLossFault("partials", on_read=1)
+        ])).install(rt)
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"),
+                                       runtime=rt)
+        np.testing.assert_allclose(got, ref, atol=1e-3)
+        assert rt.recoveries and \
+            rt.recoveries[0].lost_stage == "partials"
+        assert rt.store.demotions        # the inputs it replayed were spilled
+    finally:
+        rt.store.close()
+
+
+def test_object_spill_bills_storage_cost():
+    store = ShuffleStore(spill_backends=[
+        ObjectStoreBackend(latency_s=0.0, bw=None,
+                           cost_per_request=1e-3, cost_per_gb=0.0)])
+    t = Table({"k": np.arange(4, dtype=np.int32)})
+    store.put("app", "s", 0, t, node=0, writer="w")
+    assert store.storage_cost.get("app", 0.0) == 0.0
+    store.demote_stage("app", "s", "object")
+    assert store.storage_cost["app"] == pytest.approx(1e-3)    # the PUT
+    got = store.get("app", "s", 0, node=0)
+    np.testing.assert_array_equal(np.asarray(got["k"]), np.arange(4))
+    # the GET billed too, then promotion made the blob hot again for free
+    assert store.storage_cost["app"] == pytest.approx(2e-3)
+    assert store.promotions and store.app_bytes["app"] == t.nbytes
+    store.get("app", "s", 0, node=0)
+    assert store.storage_cost["app"] == pytest.approx(2e-3)
+
+
+# -- the cold-data scenario: object-store-seeded inputs ----------------------------
+
+
+def test_cold_seeded_inputs_first_touch_then_warm_requery(tables):
+    fd, dd, ref = tables
+    gc = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc, spill_backends=[
+        ObjectStoreBackend(latency_s=0.0, bw=None)])   # priced, not slowed
+    try:
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("static_merge"),
+                                       runtime=rt, seed_tier="object")
+        np.testing.assert_allclose(got, ref, atol=1e-3)
+        # first touch read through the object store: dollars billed, and
+        # the scanned inputs promoted into memory
+        first_cost = rt.store.storage_cost["query"]
+        assert first_cost > 0
+        assert any(s == "input/fact" for _, s, _, _, _ in
+                   rt.store.promotions)
+        # warm re-query: inputs are reused in place (no re-seed), reads are
+        # hot, and not one more object-store dollar is billed
+        got2, _ = execute_query_runtime(fd, dd,
+                                        QueryStrategy("static_merge"),
+                                        runtime=rt, reuse_inputs=True)
+        np.testing.assert_allclose(got2, ref, atol=1e-3)
+        assert rt.store.storage_cost["query"] == first_cost
+    finally:
+        rt.store.close()
+
+
+# -- cross-plane parity: seven nodes, tiers + quota engaged ------------------------
+
+
+def test_tiering_decision_parity_across_planes(tables):
+    fd, dd, ref = tables
+    quota = _unconstrained_peak(tables, strategy="dynamic")
+    wf = build_query_workflow(QueryStrategy("dynamic"))
+
+    gc_rt = GlobalController({n: 8 for n in range(4)})
+    rt = Runtime(gc_rt, spill_backends=[DiskBackend(),
+                                        _cheap_object_backend()])
+    rt.store.set_quota("query", quota)
+    try:
+        got, _ = execute_query_runtime(fd, dd, QueryStrategy("dynamic"),
+                                       runtime=rt, workflow=wf)
+        np.testing.assert_allclose(got, ref, atol=1e-3)
+        spec = rt.store.storage_spec()
+        seq_rt = [(s, d.func, d.scale, d.extra("plan", None))
+                  for s, d in wf.last_run.sequence]
+    finally:
+        rt.store.close()
+
+    gc_sim = GlobalController({n: 8 for n in range(4)})
+    sim = ClusterSim(gc_sim, storage_spec=spec,
+                     store_quotas={"query": quota})
+    pc = PrivateController("query", gc_sim, priority=10)
+    plan_query_with_workflow(sim, pc, fd, dd, QueryStrategy("dynamic"),
+                             workflow=wf)
+    sim.run()
+    seq_sim = [(s, d.func, d.scale, d.extra("plan", None))
+               for s, d in wf.last_run.sequence]
+
+    assert [s for s, *_ in seq_rt] == ["scan", "join", "exchange",
+                                       "aggregate", "pipeline", "elastic",
+                                       "tiering"]
+    assert seq_rt == seq_sim           # per-stage spill plans included
+    assert dict((s, f) for s, f, _, _ in seq_rt)["tiering"] == "spill"
