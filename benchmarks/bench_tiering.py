@@ -239,8 +239,8 @@ def main(rows: list | None = None, smoke: bool = False, reps: int = 3,
     parity = seq_rt == seq_sim
     assert parity, (seq_rt, seq_sim)
     assert [s for s, *_ in seq_rt] == ["scan", "join", "exchange",
-                                      "aggregate", "pipeline", "elastic",
-                                      "tiering"]
+                                      "skew", "aggregate", "pipeline",
+                                      "elastic", "tiering"]
 
     report = {
         "benchmark": "tiered_shuffle_storage",

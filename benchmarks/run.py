@@ -20,6 +20,7 @@ from benchmarks import (
     bench_executor,
     bench_faults,
     bench_sharing,
+    bench_skew,
     bench_tiering,
     fig4_join,
     fig7_query,
@@ -33,7 +34,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     choices=["fig4", "fig7", "fig8", "roofline", "executor",
                              "sharing", "faults", "dataplane", "elastic",
-                             "tiering"])
+                             "tiering", "skew"])
     args = ap.parse_args(argv)
 
     sections = {
@@ -47,6 +48,7 @@ def main(argv=None) -> None:
         "dataplane": bench_dataplane.main,
         "elastic": bench_elastic.main,
         "tiering": bench_tiering.main,
+        "skew": bench_skew.main,
     }
     if args.only:
         sections = {args.only: sections[args.only]}

@@ -34,7 +34,9 @@ from repro.core.decisions import (
     Schedule,
     WorkflowRun,
     elasticity_node,
+    merge_hot_keys,
     partition_skew,
+    skew_node,
     tiering_node,
 )
 
@@ -122,6 +124,65 @@ def decide_elastic(run: WorkflowRun, fanout: int, pool: int) -> Decision:
     return run.decide("elastic")
 
 
+def decide_skew(run: WorkflowRun, rows_hist, bytes_hist,
+                hot_keys) -> Decision:
+    """Plant the skew node's context contract — the observed (runtime) or
+    exactly recomputed (simulator) shuffle histogram and merged
+    heavy-hitter sketch — and bind it. One helper shared by both planes,
+    so the profile keys (and therefore the bound sequences) cannot drift
+    between the simulator and the runtime."""
+    run.ctx.profile["skew.partition_rows"] = tuple(
+        int(r) for r in rows_hist)
+    run.ctx.profile["skew.partition_bytes"] = tuple(
+        int(b) for b in bytes_hist)
+    run.ctx.profile["skew.hot_keys"] = tuple(
+        (int(k), int(c)) for k, c in hot_keys)
+    return run.decide("skew")
+
+
+def shuffle_skew_feedback(fact, n_join: int, filter_col: str = "v0",
+                          filter_gt: float = 0.0) -> tuple:
+    """The simulator's stand-in for the runtime's observed shuffle
+    feedback: ``(partition_rows, partition_bytes, hot_keys)`` of the
+    post-filter fact side, computed with the same kernels
+    (``partition_ids`` / ``heavy_hitter_sketch``) over the same partition
+    contents the runtime's shuffle writers see. Exact for materialized
+    tables (the scan filter is replayed per partition, exactly like
+    ``estimate_scan_output``), so both planes bind the identical skew
+    decision; ``PhantomTable``s yield empty histograms — the node then
+    decides ``none`` on either plane."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    parts = getattr(fact, "partitions", None)
+    if not parts:
+        return ((), (), ())
+    n_join = int(n_join)
+    rows = np.zeros(n_join, dtype=np.int64)
+    nbytes = np.zeros(n_join, dtype=np.int64)
+    sketches = []
+    for _node, t in sorted(parts.items()):
+        if t.num_rows == 0:
+            continue
+        keys = np.asarray(t["key"])
+        if filter_col in t.columns:
+            keys = keys[np.asarray(t[filter_col]) > filter_gt]
+        if keys.size == 0:
+            continue
+        row_nb = sum(int(np.prod(v.shape[1:])) * v.dtype.itemsize
+                     for v in t.columns.values())
+        pids = np.asarray(kops.partition_ids(jnp.asarray(keys, jnp.int32),
+                                             n_join))
+        hist = np.bincount(pids, minlength=n_join)[:n_join]
+        rows += hist
+        nbytes += hist * row_nb
+        sketches.append(kops.heavy_hitter_sketch(
+            jnp.asarray(keys, jnp.int32)))
+    return (tuple(int(r) for r in rows), tuple(int(b) for b in nbytes),
+            merge_hot_keys(sketches))
+
+
 # rough per-row bytes of a two-phase partial-aggregate bucket (group key +
 # accumulator), used only to *estimate* the partials stage for tiering
 PARTIAL_AGG_ROW_BYTES = 16
@@ -129,20 +190,30 @@ PARTIAL_AGG_ROW_BYTES = 16
 
 def ephemeral_stage_profile(scanned: DataDist, dist_b: DataDist,
                             join: Decision, exchange: Decision,
-                            num_groups: int) -> tuple:
+                            num_groups: int,
+                            skew: Decision | None = None) -> tuple:
     """``(stage, est_bytes, lineage_depth, downstream_remaining)`` for each
     ephemeral data stage the chosen physical plan will reclaim, in reclaim
     order — the tiering node's sizing input. Every number is derived from
-    the bound plan (estimated scan output, dim distribution, join fan-out),
-    never measured, so the runtime and the simulator price the same
-    stages identically."""
+    the bound plan (estimated scan output, dim distribution, join fan-out,
+    skew mitigation extras), never measured, so the runtime and the
+    simulator price the same stages identically."""
     n_join = join_fanout(join)
     partials = PARTIAL_AGG_ROW_BYTES * int(num_groups) * n_join
     if exchange.func == "shuffle":
-        return (("fact_buckets", int(scanned.size), 2, 2),
-                ("dim_buckets", int(dist_b.size), 2, 2),
-                ("joined", int(scanned.size), 3, 1),
-                ("partials", partials, 4, 0))
+        stages = [("fact_buckets", int(scanned.size), 2, 2),
+                  ("dim_buckets", int(dist_b.size), 2, 2)]
+        # salted sub-joins write straight into extra ``joined`` partitions,
+        # so the ``joined`` entry below already covers their output bytes
+        if skew is not None and skew.func == "broadcast":
+            # replicated hot build side: ~one dim row per heavy-hitter key
+            row_b = (int(dist_b.size) // max(1, int(dist_b.rows))) \
+                if dist_b.rows else 0
+            stages.append(("dim_hot",
+                           row_b * len(skew.extra("hot_keys", ())), 2, 1))
+        stages += [("joined", int(scanned.size), 3, 1),
+                   ("partials", partials, 4, 0)]
+        return tuple(stages)
     # broadcast path: the dim broadcast is never reclaimed (no ephemeral
     # input names it), so only the join output and the partials spill
     return (("joined", int(scanned.size), 2, 1),
@@ -223,17 +294,24 @@ def pipeline_decision(ctx: DecisionContext) -> Decision:
 def build_query_workflow(strategy, name: str | None = None,
                          consolidate_threshold: int = 2 << 30,
                          elastic_max_workers: int = 16,
+                         skew_threshold: float = 2.0,
+                         skew_min_rows: int = 4096,
+                         skew_force: str | None = None,
                          ) -> DecisionWorkflow:
-    """The query's decision workflow (paper Fig. 5): seven per-phase nodes.
+    """The query's decision workflow (paper Fig. 5): eight per-phase nodes.
 
     ``join`` is late-bound on the scan stage's feedback; ``exchange``,
     ``aggregate`` and ``pipeline`` follow the join *decision* (their
     physical effect brackets the join stage) but await only the scan
-    feedback. ``elastic`` sizes the worker pool for the join fan-out about
-    to queue, and ``tiering`` chooses spill-vs-evict per ephemeral stage
-    of the chosen plan — both decided from plan-derived inputs planted in
-    the profile by the planner, so the simulator and the runtime bind
-    identical sequences.
+    feedback. ``skew`` is the latest-bound node of all: it awaits the
+    *exchange* stage's feedback — the observed per-bucket shuffle
+    histogram — and fires between exchange and join, choosing none /
+    salted / broadcast mitigation (``skew_force`` pins the choice for A/B
+    benchmarking). ``elastic`` sizes the worker pool for the join fan-out
+    about to queue, and ``tiering`` chooses spill-vs-evict per ephemeral
+    stage of the chosen plan — both decided from plan-derived inputs
+    planted in the profile by the planner, so the simulator and the
+    runtime bind identical sequences.
     """
     wf = DecisionWorkflow(name or f"query[{strategy.name}]")
     wf.add(DecisionNode("scan", scan_decision,
@@ -245,6 +323,9 @@ def build_query_workflow(strategy, name: str | None = None,
     wf.add(DecisionNode("exchange", exchange_decision,
                         candidates=("shuffle", "broadcast")),
            depends_on=("join",), await_feedback=("scan",))
+    wf.add(skew_node(threshold=skew_threshold, min_rows=skew_min_rows,
+                     force=skew_force),
+           depends_on=("exchange",), await_feedback=("exchange",))
     wf.add(DecisionNode("aggregate", aggregate_decision,
                         candidates=("two_phase",)),
            depends_on=("exchange",), await_feedback=("scan",))
@@ -352,33 +433,14 @@ def scan_stages(app: str, fact_layout: Sequence[tuple[int, int]],
     ]
 
 
-def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
-                dim_layout: Sequence[tuple[int, int]], decision: Decision,
-                dist_f: DataDist, consolidated: bool = False,
-                num_groups: int = 64, priority: int = 0,
-                exchange: Decision | None = None,
-                aggregate: Decision | None = None,
-                pipeline: Decision | None = None) -> list:
-    """Materialize the post-scan plan from the bound decisions: the
-    ``exchange`` decision picks the pattern (``shuffle`` both sides into the
-    join's bucket space vs ``broadcast`` the dim side), the join decision's
-    ``scale``/``schedule`` set the join fan-out and placement, and the
-    ``aggregate`` decision places the two-phase aggregation. When only the
-    join decision is given (legacy up-front path) the exchange pattern is
-    derived from its ``func`` and aggregation co-locates with the join;
-    ``consolidated`` then packs the whole tail onto the data-heaviest node
-    (workflow-built consolidated decisions already carry that placement).
-
-    The ``pipeline`` decision (barrier / pipelined / fused) rides along as
-    a ``plan`` parameter on every join invocation, and every invocation
-    carries ``needs`` — the producer invocations whose commits complete its
-    inputs — so a pipelining executor can launch it at partition
-    granularity. Both are *always* materialized from the bound decision:
-    whether the executor honors them is its own flag, so the emitted plan
-    (and the decision audit) is byte-identical with pipelining on or off.
-    """
-    from repro.runtime.executor import RuntimeStage
-
+def _tail_shape(fact_layout, dim_layout, decision: Decision,
+                dist_f: DataDist, consolidated: bool,
+                exchange: Decision | None, aggregate: Decision | None,
+                pipeline: Decision | None):
+    """Shared geometry of the post-scan plan: join fan-out, placements,
+    exchange pattern and pipeline mode — one derivation for the exchange
+    wave and the join/aggregate wave, so a plan emitted in two waves is
+    identical to the same plan emitted at once."""
     all_nodes = tuple(sorted({n for _, n in fact_layout} |
                              {n for _, n in dim_layout}))
     plan_mode = pipeline.func if pipeline is not None else "barrier"
@@ -395,42 +457,230 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
         ("shuffle" if func == "merge_join" else "broadcast")
     agg_nodes = (aggregate.schedule.place(n_join) or join_nodes) \
         if aggregate is not None and not consolidated else join_nodes
+    return all_nodes, plan_mode, n_join, join_nodes, pattern, agg_nodes
+
+
+def exchange_stages(app: str, fact_layout: Sequence[tuple[int, int]],
+                    dim_layout: Sequence[tuple[int, int]],
+                    decision: Decision, dist_f: DataDist,
+                    consolidated: bool = False, priority: int = 0,
+                    exchange: Decision | None = None) -> list:
+    """The shuffle half of the post-scan plan — emitted as its own wave so
+    the skew node can bind on the *observed* shuffle histogram before the
+    join/aggregate wave materializes. Only meaningful for the shuffle
+    exchange pattern (the broadcast pattern has nothing to observe; its
+    whole tail is emitted at once)."""
+    from repro.runtime.executor import RuntimeStage
+
+    _, _, n_join, _, pattern, _ = _tail_shape(
+        fact_layout, dim_layout, decision, dist_f, consolidated, exchange,
+        None, None)
+    if pattern != "shuffle":
+        return []
+    return [
+        RuntimeStage("shuffle_fact", [
+            _inv(app, "shuffle_fact", i, "shuffle_write", node,
+                 {"src": "scan_fact", "dst": "fact_buckets",
+                  "partition": i, "num_buckets": n_join}, priority,
+                 batchable=True, needs=(f"{app}/scan_fact/{i}",))
+            for i, node in fact_layout], deps=("scan_fact",),
+            decision="exchange"),
+        RuntimeStage("shuffle_dim", [
+            _inv(app, "shuffle_dim", j, "shuffle_write", node,
+                 {"src": "scan_dim", "dst": "dim_buckets",
+                  "partition": j, "num_buckets": n_join}, priority,
+                 batchable=True, needs=(f"{app}/scan_dim/{j}",))
+            for j, node in dim_layout], deps=("scan_dim",),
+            decision="exchange"),
+    ]
+
+
+def join_agg_stages(app: str, fact_layout: Sequence[tuple[int, int]],
+                    dim_layout: Sequence[tuple[int, int]],
+                    decision: Decision, dist_f: DataDist,
+                    consolidated: bool = False, num_groups: int = 64,
+                    priority: int = 0,
+                    exchange: Decision | None = None,
+                    aggregate: Decision | None = None,
+                    pipeline: Decision | None = None,
+                    skew: Decision | None = None) -> list:
+    """Materialize the join + aggregation wave from the bound decisions:
+    the ``exchange`` decision picks the pattern (``shuffle`` both sides
+    into the join's bucket space vs ``broadcast`` the dim side), the join
+    decision's ``scale``/``schedule`` set the join fan-out and placement,
+    and the ``aggregate`` decision places the two-phase aggregation. When
+    only the join decision is given (legacy up-front path) the exchange
+    pattern is derived from its ``func`` and aggregation co-locates with
+    the join; ``consolidated`` then packs the whole tail onto the
+    data-heaviest node (workflow-built consolidated decisions already
+    carry that placement).
+
+    The ``pipeline`` decision (barrier / pipelined / fused) rides along as
+    a ``plan`` parameter on every join invocation, and every invocation
+    carries ``needs`` — the producer invocations whose commits complete its
+    inputs — so a pipelining executor can launch it at partition
+    granularity. Both are *always* materialized from the bound decision:
+    whether the executor honors them is its own flag, so the emitted plan
+    (and the decision audit) is byte-identical with pipelining on or off.
+
+    The ``skew`` decision rewrites the heavy part of the shuffle join's
+    fan-in without touching anything downstream:
+
+      * ``salted`` — each heavy bucket becomes ``salt`` *writer-sharded*
+        sub-joins (``salted_join`` stage): each sub-join reads only its
+        round-robin share of the bucket's per-writer slices (the store
+        keeps every shuffle writer's slice separately, so a shard read
+        moves 1/salt of the bucket's bytes) and writes straight into an
+        extra ``joined`` partition the aggregation folds like any other.
+        The normal join stage simply skips the heavy buckets, and no
+        single invocation ever pulls a heavy bucket whole — the read, not
+        just the probe, is what skew serializes. Sub-join ``needs`` edges
+        are per-shard: a shard launches as soon as ITS writers (plus the
+        dim side's) committed. Bucket reclaim moves from the join stage
+        to partial_agg, whose deps cover every bucket reader.
+      * ``broadcast`` — the heavy-hitter keys are joined separately: one
+        ``hot_build`` invocation replicates their dim rows from the scan
+        output, and per-fact-partition ``hot_join`` probes write extra
+        ``joined`` partitions. The buckets that contain the hot keys are
+        still heavy to *read*, so they get the same writer-sharded
+        sub-joins with ``drop_keys`` folded in (single-shard fallback:
+        a plain ``drop_keys`` join).
+
+    Either way the ``partials``/``result`` layout downstream stages see
+    is exactly the unmitigated plan's — mitigation is control-plane-
+    visible (audited) but invisible to the aggregation contract.
+    """
+    from repro.runtime.executor import RuntimeStage
+
+    all_nodes, plan_mode, n_join, join_nodes, pattern, agg_nodes = \
+        _tail_shape(fact_layout, dim_layout, decision, dist_f, consolidated,
+                    exchange, aggregate, pipeline)
 
     stages = []
     if pattern == "shuffle":
+        skew_func = skew.func if skew is not None else "none"
+        heavy = {int(b): int(r)
+                 for b, r in (skew.extra("heavy", ()) if skew else ())}
+        hot = tuple(int(k) for k in
+                    (skew.extra("hot_keys", ()) if skew else ()))
+        salt = int(skew.extra("salt", 0)) if skew is not None else 0
         # hash distribution is all-to-all: every join bucket may hold rows
         # from every writer, so a join's inputs are complete only once ALL
         # shuffle writers committed
-        writers = tuple([f"{app}/shuffle_fact/{i}" for i, _ in fact_layout] +
-                        [f"{app}/shuffle_dim/{j}" for j, _ in dim_layout])
-        stages += [
-            RuntimeStage("shuffle_fact", [
-                _inv(app, "shuffle_fact", i, "shuffle_write", node,
-                     {"src": "scan_fact", "dst": "fact_buckets",
-                      "partition": i, "num_buckets": n_join}, priority,
-                     batchable=True, needs=(f"{app}/scan_fact/{i}",))
-                for i, node in fact_layout], deps=("scan_fact",),
-                decision="exchange"),
-            RuntimeStage("shuffle_dim", [
-                _inv(app, "shuffle_dim", j, "shuffle_write", node,
-                     {"src": "scan_dim", "dst": "dim_buckets",
-                      "partition": j, "num_buckets": n_join}, priority,
-                     batchable=True, needs=(f"{app}/scan_dim/{j}",))
-                for j, node in dim_layout], deps=("scan_dim",),
-                decision="exchange"),
-            RuntimeStage("join", [
-                _inv(app, "join", r, "merge_join_partition", join_nodes[r],
-                     {"fact_stage": "fact_buckets", "fact_partitions": [r],
+        fact_writers = tuple(f"{app}/shuffle_fact/{i}"
+                             for i, _ in fact_layout)
+        dim_writers_sh = tuple(f"{app}/shuffle_dim/{j}"
+                               for j, _ in dim_layout)
+        writers = fact_writers + dim_writers_sh
+        broadcast_hot = skew_func == "broadcast" and bool(hot)
+        hot_buckets: set[int] = set()
+        if broadcast_hot:
+            from repro.kernels import ops as kops
+            hot_buckets = {int(b) for b in np.asarray(
+                kops.partition_ids(np.asarray(hot, np.int32), n_join))}
+        # which buckets get writer-sharded sub-joins, and the extra params
+        # their sub-joins carry. Sharding needs >= 2 fact writers: with one
+        # writer a "shard" would be the whole bucket again
+        n_shard = min(salt, len(fact_writers))
+        shard: dict[int, dict] = {}
+        if n_shard > 1:
+            if skew_func == "salted" and heavy:
+                shard = {r: {} for r in sorted(heavy)}
+            elif broadcast_hot:
+                shard = {r: {"drop_keys": hot} for r in sorted(hot_buckets)}
+        # buckets stay alive until partial_agg when a sharded stage also
+        # reads them; the unmitigated plan reclaims at the join stage
+        # exactly as before
+        join_ephemeral = () if shard else ("fact_buckets", "dim_buckets")
+        join_invs = []
+        for r in range(n_join):
+            if r in shard:
+                continue   # the writer-sharded sub-joins cover this bucket
+            params = {"fact_stage": "fact_buckets", "fact_partitions": [r],
                       "dim_stage": "dim_buckets", "dim_partitions": [r],
                       "dst": "joined", "partition": r,
-                      "num_groups": num_groups, "plan": plan_mode},
-                     priority, needs=writers)
-                for r in range(n_join)],
-                deps=("shuffle_fact", "shuffle_dim"),
-                ephemeral_inputs=("fact_buckets", "dim_buckets"),
-                decision="join"),
+                      "num_groups": num_groups, "plan": plan_mode}
+            if broadcast_hot and r in hot_buckets:
+                params["drop_keys"] = hot
+            join_invs.append(
+                _inv(app, "join", r, "merge_join_partition", join_nodes[r],
+                     params, priority, needs=writers))
+        stages += [
+            RuntimeStage("join", join_invs,
+                         deps=("shuffle_fact", "shuffle_dim"),
+                         ephemeral_inputs=join_ephemeral, decision="join"),
         ]
+        agg_parts = [r for r in range(n_join) if r not in shard]
+        agg_needs = {r: (f"{app}/join/{r}",) for r in agg_parts}
+        agg_deps = ("join",)
+        agg_ephemeral = ("joined",)
+        if shard:
+            # extra joined partitions: hot_join probes (broadcast) own
+            # n_join .. n_join+len(fact_layout)-1, shard outputs follow
+            base = n_join + (len(fact_layout) if broadcast_hot else 0)
+            salt_nodes = skew.schedule.place(len(shard) * n_shard) \
+                or join_nodes
+            sub_invs = []
+            si = 0
+            for r in sorted(shard):
+                for g in range(n_shard):
+                    group = fact_writers[g::n_shard]
+                    params = {"fact_stage": "fact_buckets",
+                              "fact_partitions": [r],
+                              "fact_writers": group,
+                              "dim_stage": "dim_buckets",
+                              "dim_partitions": [r],
+                              "dst": "joined", "partition": base + si,
+                              "num_groups": num_groups, "plan": plan_mode}
+                    params.update(shard[r])
+                    sub_invs.append(_inv(
+                        app, "salted_join", si, "salted_join_partition",
+                        salt_nodes[si % len(salt_nodes)], params, priority,
+                        needs=group + dim_writers_sh))
+                    agg_needs[base + si] = (f"{app}/salted_join/{si}",)
+                    agg_parts.append(base + si)
+                    si += 1
+            stages += [
+                RuntimeStage("salted_join", sub_invs,
+                             deps=("shuffle_fact", "shuffle_dim"),
+                             decision="skew"),
+            ]
+            agg_deps = ("join", "salted_join")
+            agg_ephemeral = ("joined", "fact_buckets", "dim_buckets")
+        if broadcast_hot:
+            dim_writers = tuple(f"{app}/scan_dim/{j}" for j, _ in dim_layout)
+            stages += [
+                RuntimeStage("hot_build", [
+                    _inv(app, "hot_build", 0, "hot_filter_write",
+                         dim_layout[0][1],
+                         {"src": "scan_dim",
+                          "src_partitions": [j for j, _ in dim_layout],
+                          "keys": hot, "dst": "dim_hot"}, priority,
+                         needs=dim_writers)],
+                    deps=("scan_dim",), decision="skew"),
+                RuntimeStage("hot_join", [
+                    _inv(app, "hot_join", i, "hot_join_partition", node,
+                         {"fact_stage": "scan_fact", "fact_partitions": [i],
+                          "dim_stage": "dim_hot", "dim_partitions": [0],
+                          "keep_keys": hot, "dst": "joined",
+                          "partition": n_join + i,
+                          "num_groups": num_groups, "plan": plan_mode},
+                         priority,
+                         needs=(f"{app}/scan_fact/{i}",
+                                f"{app}/hot_build/0"))
+                    for i, node in fact_layout],
+                    deps=("scan_fact", "hot_build"), decision="skew"),
+            ]
+            for i, _node in fact_layout:
+                agg_needs[n_join + i] = (f"{app}/hot_join/{i}",)
+                agg_parts.append(n_join + i)
+            agg_deps = agg_deps + ("hot_join",)
+            agg_ephemeral = agg_ephemeral + ("dim_hot",)
     else:
+        agg_parts = list(range(n_join))
+        agg_needs = {r: (f"{app}/join/{r}",) for r in range(n_join)}
+        agg_deps = ("join",)
+        agg_ephemeral = ("joined",)
         bcast = tuple(f"{app}/broadcast_dim/{j}" for j, _ in dim_layout)
         stages += [
             RuntimeStage("broadcast_dim", [
@@ -456,34 +706,70 @@ def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
                 deps=("scan_fact", "broadcast_dim"), decision="join"),
         ]
 
+    pagg_nodes = {k: agg_nodes[j % len(agg_nodes)]
+                  for j, k in enumerate(agg_parts)}
     stages += [
         RuntimeStage("partial_agg", [
-            _inv(app, "partial_agg", k, "partial_aggregate", agg_nodes[k],
+            _inv(app, "partial_agg", k, "partial_aggregate", pagg_nodes[k],
                  {"src": "joined", "dst": "partials", "partition": k,
                   "num_groups": num_groups}, priority, batchable=True,
-                 needs=(f"{app}/join/{k}",))
-            for k in range(n_join)], deps=("join",),
-            ephemeral_inputs=("joined",), decision="aggregate"),
+                 needs=agg_needs[k])
+            for k in agg_parts], deps=agg_deps,
+            ephemeral_inputs=agg_ephemeral, decision="aggregate"),
         RuntimeStage("final_agg", [
             _inv(app, "final_agg", 0, "final_aggregate", agg_nodes[0],
                  {"src": "partials", "dst": "result",
                   "num_groups": num_groups}, priority,
                  needs=tuple(f"{app}/partial_agg/{k}"
-                             for k in range(n_join)))],
+                             for k in agg_parts))],
             deps=("partial_agg",), ephemeral_inputs=("partials",),
             decision="aggregate"),
     ]
     return stages
 
 
+def tail_stages(app: str, fact_layout: Sequence[tuple[int, int]],
+                dim_layout: Sequence[tuple[int, int]], decision: Decision,
+                dist_f: DataDist, consolidated: bool = False,
+                num_groups: int = 64, priority: int = 0,
+                exchange: Decision | None = None,
+                aggregate: Decision | None = None,
+                pipeline: Decision | None = None,
+                skew: Decision | None = None) -> list:
+    """The full post-scan plan in one list: the exchange wave (when the
+    pattern shuffles) followed by the join/aggregate wave — what the
+    adaptive planner emits in two callbacks, concatenated. Static callers
+    (``stages_for_run``, the up-front legacy path) use this; they already
+    hold every decision, including skew."""
+    return exchange_stages(
+        app, fact_layout, dim_layout, decision, dist_f,
+        consolidated=consolidated, priority=priority, exchange=exchange,
+    ) + join_agg_stages(
+        app, fact_layout, dim_layout, decision, dist_f,
+        consolidated=consolidated, num_groups=num_groups, priority=priority,
+        exchange=exchange, aggregate=aggregate, pipeline=pipeline,
+        skew=skew)
+
+
 class AdaptiveQueryPlan:
     """Stage planner driving one ``WorkflowRun`` against the runtime.
 
     The DAG executor calls ``on_stage_complete`` as physical stages finish.
-    Once both scan stages are done, the measured stage metrics and the
-    observed post-filter distribution are folded into the workflow context,
-    the join/exchange/aggregate decisions bind (late), and the tail of the
-    physical plan is emitted — the paper's decide→execute→re-decide loop.
+    The decide→execute→re-decide loop now has two re-plan points:
+
+    1. Once ``scan_fact`` lands, the measured metrics and the observed
+       post-filter distribution bind ``join`` and ``exchange``. A shuffle
+       exchange emits only the shuffle wave; a broadcast exchange has no
+       shuffle histogram to wait for, so the skew node binds immediately
+       (trivially ``none``) and the whole tail is emitted.
+    2. Once both shuffle stages land, the observed per-bucket histogram
+       and heavy-hitter sketch from ``profile_feedback`` bind ``skew``,
+       then ``aggregate``/``pipeline``/``elastic``/``tiering``, and the
+       join/aggregate wave — including any mitigation stages — is emitted.
+
+    Two-wave emission costs nothing at s=0: every join invocation needs
+    ALL shuffle writers (hash distribution is all-to-all), so no join
+    could have launched before the shuffle completed anyway.
     """
 
     def __init__(self, run: WorkflowRun, app: str,
@@ -498,6 +784,10 @@ class AdaptiveQueryPlan:
         self.priority = priority
         self._completed: set[str] = set()
         self._tail_planned = False
+        self._join_planned = False
+        self._join_d: Decision | None = None
+        self._exchange_d: Decision | None = None
+        self._scanned: DataDist | None = None
 
     def initial_stages(self) -> list:
         self.run.decide("scan")
@@ -508,10 +798,19 @@ class AdaptiveQueryPlan:
         self._completed.add(stage)
         # The join decision needs only the *fact* side's observed post-filter
         # output (the dim side has no filter, its input dist is app
-        # knowledge) — so the tail binds as soon as scan_fact lands, and
-        # e.g. shuffle_fact overlaps a still-running scan_dim.
-        if self._tail_planned or "scan_fact" not in self._completed:
-            return []
+        # knowledge) — so the first wave binds as soon as scan_fact lands,
+        # and e.g. shuffle_fact overlaps a still-running scan_dim.
+        if not self._tail_planned:
+            if "scan_fact" not in self._completed:
+                return []
+            return self._plan_exchange(runtime, pc)
+        if not self._join_planned and self._exchange_d is not None and \
+                self._exchange_d.func == "shuffle" and \
+                {"shuffle_fact", "shuffle_dim"} <= self._completed:
+            return self._plan_join_tail(runtime)
+        return []
+
+    def _plan_exchange(self, runtime, pc) -> list:
         self._tail_planned = True
         # Fig. 5 step 4: fold observed output + metrics, then decide late.
         scanned = runtime.store.data_dist(self.app, "scan_fact",
@@ -524,6 +823,46 @@ class AdaptiveQueryPlan:
                           runtime.metrics.profile_feedback(self.app))
         join_d = self.run.decide("join")
         exchange_d = self.run.decide("exchange")
+        self._join_d, self._exchange_d, self._scanned = \
+            join_d, exchange_d, scanned
+        if exchange_d.func == "shuffle":
+            # emit only the shuffle wave: the skew node (and everything
+            # after it) binds on the observed bucket histogram in wave 2
+            return exchange_stages(
+                self.app, self.fact_layout, self.dim_layout, join_d,
+                self.run.ctx.data_dist["A"], priority=self.priority,
+                exchange=exchange_d)
+        # broadcast exchange: no shuffle to observe — skew binds now, on
+        # an empty histogram, and trivially decides "none"
+        self._join_planned = True
+        self.run.feedback("exchange", {})
+        skew_d = decide_skew(self.run, (), (), ())
+        return self._plan_rest(runtime, skew_d)
+
+    def _plan_join_tail(self, runtime) -> list:
+        self._join_planned = True
+        # wave 2, Fig. 5 step 4 again: the *observed* shuffle histogram
+        # and merged heavy-hitter sketch feed the skew node
+        fb = runtime.metrics.profile_feedback(self.app)
+        self.run.feedback("exchange", fb)
+        rows = tuple(fb.get("shuffle_fact.partition_rows", ()))
+        nbytes = tuple(fb.get("shuffle_fact.partition_bytes", ()))
+        hot = tuple(fb.get("shuffle_fact.hot_keys", ()))
+        skew_d = decide_skew(self.run, rows, nbytes, hot)
+        # partition balance as counter tracks: visible in the Chrome trace
+        # next to slot occupancy and store bytes
+        from repro.obs.tracer import get_tracer
+        tr = get_tracer()
+        if tr.enabled and nbytes:
+            tr.count(f"skew/{self.app}/max_partition_bytes", max(nbytes))
+            tr.count(f"skew/{self.app}/mean_partition_bytes",
+                     int(sum(nbytes) / len(nbytes)))
+            tr.count(f"skew/{self.app}/hot_keys", len(hot))
+        return self._plan_rest(runtime, skew_d)
+
+    def _plan_rest(self, runtime, skew_d: Decision) -> list:
+        join_d, exchange_d, scanned = \
+            self._join_d, self._exchange_d, self._scanned
         aggregate_d = self.run.decide("aggregate")
         pipeline_d = self.run.decide("pipeline")
         # elasticity: size the worker pool for the join fan-out about to
@@ -544,17 +883,18 @@ class AdaptiveQueryPlan:
         tier_d = decide_tiering(
             self.run,
             ephemeral_stage_profile(scanned, self.run.ctx.data_dist["B"],
-                                    join_d, exchange_d, self.num_groups),
+                                    join_d, exchange_d, self.num_groups,
+                                    skew=skew_d),
             store.quota(self.app), store.storage_spec())
         if tier_d.func != "keep":
             store.set_spill_policy(self.app, dict(tier_d.extra("plan", ())))
         # consolidated join decisions already carry their packed placement,
         # so the materialization is exactly what the sequence records
-        return tail_stages(
+        return join_agg_stages(
             self.app, self.fact_layout, self.dim_layout, join_d,
             self.run.ctx.data_dist["A"], num_groups=self.num_groups,
             priority=self.priority, exchange=exchange_d,
-            aggregate=aggregate_d, pipeline=pipeline_d)
+            aggregate=aggregate_d, pipeline=pipeline_d, skew=skew_d)
 
 
 def stages_for_run(run: WorkflowRun, app: str,
@@ -571,7 +911,8 @@ def stages_for_run(run: WorkflowRun, app: str,
         run.ctx.data_dist["A"], num_groups=num_groups, priority=priority,
         exchange=run.decisions.get("exchange"),
         aggregate=run.decisions.get("aggregate"),
-        pipeline=run.decisions.get("pipeline"))
+        pipeline=run.decisions.get("pipeline"),
+        skew=run.decisions.get("skew"))
 
 
 # ---------------------------------------------------------------------------
@@ -622,6 +963,21 @@ def plan_query_with_workflow(sim, pc, fact, dim, strategy,
                           "scan_fact.estimated": True})
     decision = run.decide("join")
     exchange_d = run.decide("exchange")
+    # skew feedback: the sim *recomputes* exactly what the runtime's shuffle
+    # writers would observe — same partition_ids kernel, same sketch, same
+    # post-filter rows — so both planes bind the skew node on identical
+    # evidence and materialize identical decision sequences
+    if exchange_d.func == "shuffle":
+        rows_h, bytes_h, hot = shuffle_skew_feedback(
+            fact, join_fanout(decision))
+        run.feedback("exchange",
+                     {"shuffle_fact.partition_rows": rows_h,
+                      "shuffle_fact.partition_bytes": bytes_h,
+                      "shuffle_fact.hot_keys": hot})
+    else:
+        rows_h, bytes_h, hot = (), (), ()
+        run.feedback("exchange", {})
+    skew_d = decide_skew(run, rows_h, bytes_h, hot)
     run.decide("aggregate")
     run.decide("pipeline")
     # elasticity, through the same helper as the runtime plane: the sim's
@@ -640,7 +996,8 @@ def plan_query_with_workflow(sim, pc, fact, dim, strategy,
         store_quota = (getattr(sim, "store_quotas", None) or {}).get(app)
     decide_tiering(run,
                    ephemeral_stage_profile(scanned, dist_d, decision,
-                                           exchange_d, num_groups),
+                                           exchange_d, num_groups,
+                                           skew=skew_d),
                    store_quota, storage_spec)
     consolidated = bool(decision.extra("consolidate", False))
 

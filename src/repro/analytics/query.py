@@ -50,6 +50,7 @@ from repro.core.decisions import (
 def synth_query_tables(rows: int = 4096, dim_rows: int = 512,
                        keyspace: int | None = None, seed: int = 1,
                        fact_nodes=4, dim_nodes=2, num_groups: int = 64,
+                       zipf: float = 0.0, heavy_hitters: int = 0,
                        ) -> tuple[DistTable, DistTable, np.ndarray]:
     """Synthetic fact/dim pair + numpy oracle for the TPC-DS-like sub-query.
 
@@ -58,9 +59,18 @@ def synth_query_tables(rows: int = 4096, dim_rows: int = 512,
     the copies drifting). ``fact_nodes``/``dim_nodes`` take a node count
     (placed on ``0..n-1``) or an explicit node iterable; the dim table uses
     ``seed + 1``. Returns ``(fact, dim, reference_sums)``.
+
+    ``zipf=s`` draws fact keys from a Zipf(s) law over the keyspace (key
+    ``r`` carries mass ``(r+1)^-s``); ``heavy_hitters=H`` routes ~half the
+    rows to ``H`` seeded hot keys on top of whatever base law is active.
+    Both are seeded and leave the default (``zipf=0, heavy_hitters=0``)
+    fact table byte-identical to the uniform workload.
     """
     ks = keyspace if keyspace is not None else 2 * max(rows, dim_rows)
-    fact = synth_table("f", rows, ks, seed=seed)
+    if zipf or heavy_hitters:
+        fact = _synth_skewed_fact(rows, ks, seed, zipf, heavy_hitters)
+    else:
+        fact = synth_table("f", rows, ks, seed=seed)
     dimc = synth_table("d", dim_rows, ks, seed=seed + 1, unique_keys=True)
     dim = Table({**dimc.columns,
                  "cat": jnp.arange(dim_rows, dtype=jnp.int32) % num_groups})
@@ -70,6 +80,36 @@ def synth_query_tables(rows: int = 4096, dim_rows: int = 512,
     dim_nodes = range(dim_nodes) if isinstance(dim_nodes, int) else dim_nodes
     return (distribute(fact, fact_nodes, "A"),
             distribute(dim, dim_nodes, "B"), ref)
+
+
+def zipf_weights(key_space: int, s: float) -> np.ndarray:
+    """Normalized Zipf(s) mass over keys ``0..key_space-1`` (key ``r`` gets
+    mass ``(r+1)^-s``). Shared by the generator and the tests that check
+    the realized histogram against the requested law."""
+    w = np.arange(1, int(key_space) + 1, dtype=np.float64) ** -float(s)
+    return w / w.sum()
+
+
+def _synth_skewed_fact(rows: int, key_space: int, seed: int,
+                       zipf: float, heavy_hitters: int) -> Table:
+    """Skewed twin of ``synth_table('f', ...)`` — same column recipe
+    (int32 ``key``, float32 ``v0``/``v1``), different key law."""
+    rng = np.random.default_rng(seed)
+    if zipf:
+        keys = rng.choice(int(key_space), size=rows,
+                          p=zipf_weights(key_space, zipf))
+    else:
+        keys = rng.integers(0, key_space, size=rows)
+    if heavy_hitters:
+        h = int(heavy_hitters)
+        hot = rng.permutation(int(key_space))[:h]
+        mask = rng.random(rows) < 0.5
+        keys = np.where(mask, hot[rng.integers(0, h, size=rows)], keys)
+    cols = {"key": jnp.asarray(keys, jnp.int32)}
+    for i in range(2):
+        cols[f"v{i}"] = jnp.asarray(
+            rng.standard_normal(rows, dtype=np.float32))
+    return Table(cols)
 
 
 @dataclass

@@ -28,6 +28,7 @@ workflows.
 
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -69,6 +70,22 @@ def partition_skew(counts: Iterable[int]) -> float:
         return 0.0
     mean = sum(counts) / len(counts)
     return float(max(counts) / max(mean, 1e-9))
+
+
+def merge_hot_keys(sketches: Iterable[Iterable[tuple[int, int]]],
+                   k: int = 8) -> tuple[tuple[int, int], ...]:
+    """Merge per-partition heavy-hitter sketches (``((key, count), ...)``)
+    into one global top-k, ordered by (-count, key). Summation by key is
+    order-independent, so the runtime (merging observed per-invocation
+    sketches) and the simulator (merging recomputed per-partition sketches)
+    produce bit-identical results from the same inputs."""
+    counts: dict[int, int] = {}
+    for sketch in sketches:
+        for key, c in sketch:
+            key = int(key)
+            counts[key] = counts.get(key, 0) + int(c)
+    top = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))
+    return tuple((k_, c) for k_, c in top[:max(1, int(k))])
 
 
 @dataclass
@@ -417,6 +434,109 @@ def tiering_node(loss_rate: float = 0.05, recompute_bw: float = 32e6,
                         extras=(("plan", tuple(plan)),))
 
     return DecisionNode(name, fn, candidates=("spill", "evict", "keep"))
+
+
+def skew_mitigation(rows_hist: Sequence[int],
+                    hot_keys: Sequence[tuple[int, int]],
+                    threshold: float = 2.0, min_rows: int = 4096,
+                    salt_cap: int = 8, hot_frac: float = 0.08,
+                    force: str | None = None,
+                    ) -> tuple[str, tuple[tuple[int, int], ...], int,
+                               tuple[int, ...]]:
+    """Pure skew-mitigation rule shared by the runtime planner and the
+    cluster simulator (the sharing is what makes skew decision sequences
+    identical across planes). From an observed per-bucket row histogram
+    and a merged heavy-hitter sketch, pick:
+
+      * ``("none", (), 0, ())`` — balanced enough (max/mean below
+        ``threshold``) or too small (< ``min_rows``) to be worth touching;
+      * ``("broadcast", heavy, salt, hot)`` — a few keys dominate
+        (any sketch key holding >= ``hot_frac`` of all rows): split them
+        out of the shuffle and join them against a replicated build side,
+        and shard what remains of the heavy buckets ``salt`` ways;
+      * ``("salted", heavy, salt, ())`` — buckets are lopsided without a
+        single dominating key: split each heavy bucket (>= ``threshold`` x
+        mean rows) into ``salt`` writer-sharded sub-joins.
+
+    ``heavy`` is ``((bucket, rows), ...)``; ``salt`` = ceil(max/mean)
+    clamped to ``[2, salt_cap]``. ``force`` pins the mitigation for A/B
+    benchmarking: a forced choice still needs a histogram to split on
+    (empty input stays ``none``), and forced ``salted`` on balanced data
+    splits the single largest bucket.
+    """
+    rows = [int(r) for r in rows_hist]
+    total = sum(rows)
+    if total <= 0 or len(rows) < 2:
+        return ("none", (), 0, ())
+    mean = total / len(rows)
+    ratio = max(rows) / max(mean, 1e-9)
+    heavy = tuple((b, r) for b, r in enumerate(rows)
+                  if r >= threshold * mean and r > 0)
+    hot = tuple(int(k) for k, c in hot_keys if c >= hot_frac * total)
+    salt = max(2, min(int(salt_cap), math.ceil(ratio)))
+    if force == "none":
+        return ("none", (), 0, ())
+    if force == "broadcast":
+        if not hot:
+            hot = tuple(int(k) for k, _ in list(hot_keys)[:2])
+        return ("broadcast", heavy, salt, hot) if hot \
+            else ("none", (), 0, ())
+    if force == "salted":
+        if not heavy:
+            b = max(range(len(rows)), key=lambda i: rows[i])
+            heavy = ((b, rows[b]),)
+        return ("salted", heavy, salt, ())
+    if total < min_rows or ratio < threshold:
+        return ("none", (), 0, ())
+    if hot:
+        return ("broadcast", heavy, salt, hot)
+    if heavy:
+        return ("salted", heavy, salt, ())
+    return ("none", (), 0, ())
+
+
+def skew_node(threshold: float = 2.0, min_rows: int = 4096,
+              salt_cap: int = 8, hot_frac: float = 0.08,
+              force: str | None = None, name: str = "skew") -> DecisionNode:
+    """Skew mitigation as a decision node: fire between exchange and join
+    on the *observed* shuffle histogram — not a planner estimate — and
+    rewrite the heavy part of the join fan-in (ROADMAP's skew half of the
+    plan-language item; Lambada's exchange-balance concern).
+
+    Context contract (fed by the planner on either plane before the node
+    binds): ``profile["skew.partition_rows"]`` / ``["skew.partition_bytes"]``
+    — per-join-bucket row/byte histograms summed over the shuffle writers
+    (runtime: observed via ``InvocationRecord.stats``; simulator: exactly
+    recomputed from the same partition contents), and
+    ``profile["skew.hot_keys"]`` — the merged top-k heavy-hitter sketch
+    ``((key, count), ...)``. Empty histograms (broadcast exchange, phantom
+    tables) bind ``none`` — today's behavior, byte-identical on both
+    planes. Decides ``Decision("none"|"salted"|"broadcast", n_extra_invs,
+    schedule)`` reusing the join schedule's node set; ``extras`` carry
+    everything stage materialization needs (``heavy`` buckets, ``salt``
+    width, ``hot_keys``) plus the observed ``ratio`` so the audit log
+    shows why.
+    """
+
+    def fn(ctx: DecisionContext) -> Decision:
+        rows = tuple(ctx.profile.get("skew.partition_rows", ()))
+        nbytes = tuple(ctx.profile.get("skew.partition_bytes", ()))
+        sketch = tuple(ctx.profile.get("skew.hot_keys", ()))
+        func, heavy, salt, hot = skew_mitigation(
+            rows, sketch, threshold=threshold, min_rows=min_rows,
+            salt_cap=salt_cap, hot_frac=hot_frac, force=force)
+        join = ctx.decisions.get("join")
+        sched = join.schedule if join is not None else Schedule(
+            "round-robin", tuple(sorted(ctx.node_status.total_slots)))
+        scale = len(heavy) * salt if func == "salted" else len(hot)
+        return Decision(func, scale, sched,
+                        extras=(("heavy", heavy), ("salt", salt),
+                                ("hot_keys", hot),
+                                ("ratio", round(partition_skew(rows), 4)),
+                                ("max_bytes", max(nbytes, default=0)),
+                                ("total_rows", sum(int(r) for r in rows))))
+
+    return DecisionNode(name, fn, candidates=("none", "salted", "broadcast"))
 
 
 @dataclass

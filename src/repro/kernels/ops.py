@@ -219,6 +219,71 @@ def grouping_indices(part_ids, num_partitions: int,
         return order[:n], offsets
 
 
+def shape_class_count() -> int:
+    """Distinct (padded_len, num_partitions) shape classes dispatched so
+    far — the compile-cache growth figure the skew regression test bounds
+    (salted sub-joins quantize their chunk sizes so a lopsided bucket adds
+    at most two classes, not one per chunk)."""
+    return len(_SHAPE_CLASSES)
+
+
+# heavy-hitter sketch sizing: one hash-slot histogram per shuffle writer.
+# 512 slots keeps the counter array a single cache line level while a
+# dominating key still owns its slot with overwhelming probability.
+HOT_SKETCH_SLOTS = 512
+HOT_KEYS_K = 8
+
+
+def heavy_hitter_sketch(keys, k: int = HOT_KEYS_K,
+                        num_slots: int = HOT_SKETCH_SLOTS,
+                        force_kernel: bool = False,
+                        ) -> tuple[tuple[int, int], ...]:
+    """Exact top-k heavy hitters of a key column, sketch-then-verify.
+
+    Phase 1 hashes every key into ``num_slots`` counters — the Pallas
+    one-hot histogram on TPU (``force_kernel`` for interpret-mode tests),
+    the jnp bincount reference elsewhere: the same dispatch as
+    ``partition_histogram``, and a single fixed shape class regardless of
+    key cardinality. Phase 2 takes the ``k`` heaviest slots as candidates
+    and counts their actual keys exactly on the host (a small subset when
+    the data is skewed). Returns ``((key, count), ...)`` sorted by
+    (-count, key) — deterministic, so the runtime's observed sketch and
+    the simulator's recomputation of it are identical tuples.
+    """
+    n = int(keys.shape[0])
+    if n == 0:
+        return ()
+    k = max(1, int(k))
+    keys = jnp.asarray(keys, jnp.int32)
+    slot_ids = partition_ids(keys, num_slots)
+    hist = np.asarray(partition_histogram(slot_ids, num_slots,
+                                          force_kernel=force_kernel))
+    cand = np.argsort(-hist, kind="stable")[:k]
+    cand = cand[hist[cand] > 0]
+    if cand.size == 0:
+        return ()
+    mask = np.isin(np.asarray(slot_ids), cand)
+    sub = np.asarray(keys)[mask]
+    uniq, counts = np.unique(sub, return_counts=True)
+    order = np.lexsort((uniq, -counts))[:k]
+    return tuple((int(uniq[i]), int(counts[i])) for i in order)
+
+
+def salted_ranges(total_rows: int, salt: int) -> tuple[tuple[int, int], ...]:
+    """Row ranges splitting a heavy join bucket ``salt`` ways for the
+    salted sub-joins. The chunk size is quantized UP to a power of two
+    (``_pad_len``), so every full chunk is exactly one padded shape class
+    and only the final remainder chunk can add a second — the cap that
+    keeps a skewed bucket from fanning the compile cache into per-chunk
+    classes. May return fewer than ``salt`` ranges after quantization."""
+    total = int(total_rows)
+    if total <= 0:
+        return ()
+    chunk = _pad_len(-(-total // max(1, int(salt))))
+    return tuple((lo, min(lo + chunk, total))
+                 for lo in range(0, total, chunk))
+
+
 def grouping_cache_size() -> int:
     """Compiled-executable count of the jitted grouping body — the CI
     smoke benchmark asserts this stays at one per (shape class, bucket

@@ -26,6 +26,12 @@ Stage-name and partition parameters arrive via ``ctx.params``:
     hash_join_partition / merge_join_partition
                      fact_stage, fact_partitions, dim_stage,
                      dim_partitions | "all", dst, partition, num_groups
+    salted_join_partition
+                     join params + fact_writers (one writer shard of a
+                     heavy bucket) [, drop_keys]
+    hot_filter_write src, src_partitions, keys, dst
+    hot_join_partition
+                     join params + keep_keys (heavy-hitter probe split)
     partial_aggregate  src, dst, partition, num_groups
     final_aggregate    src, dst, num_groups
     cpu_spin         dst, partition [, iters]
@@ -120,6 +126,18 @@ def shuffle_write(ctx) -> None:
     # the kernels, not for per-(shape, range) slice/concat plumbing
     permuted = Table({k: np.asarray(v) for k, v in t.take(order).columns.items()})
     bounds = np.asarray(offsets)
+    # skew detection rides the grouping we already paid for: the offset
+    # diffs ARE the per-bucket row histogram, and the heavy-hitter sketch
+    # is one fixed-shape hash-slot histogram (Pallas on TPU) plus an exact
+    # host count of the candidate slots. Lands on the invocation record via
+    # ctx.stats -> profile_feedback, where the planner's skew node reads
+    # the observed (not estimated) distribution.
+    rows_hist = np.diff(bounds)
+    row_nb = sum(int(np.prod(v.shape[1:])) * v.dtype.itemsize
+                 for v in permuted.columns.values())
+    ctx.stats["partition_rows"] = tuple(int(r) for r in rows_hist)
+    ctx.stats["partition_bytes"] = tuple(int(r) * row_nb for r in rows_hist)
+    ctx.stats["hot_keys"] = kops.heavy_hitter_sketch(t["key"])
     out = {r: permuted.slice(bounds[r], bounds[r + 1])
            for r in range(nb) if bounds[r + 1] > bounds[r]}
     ctx.put_many(p["dst"], out)
@@ -160,7 +178,8 @@ def broadcast_write(ctx) -> None:
 PREFETCH_WINDOW = 2     # in-flight fetches per side (double buffering)
 
 
-def _read_side(ctx, stage: str, parts, window: int = PREFETCH_WINDOW):
+def _read_side(ctx, stage: str, parts, window: int = PREFETCH_WINDOW,
+               writers=None):
     """Concatenate a join side's partitions in ONE multi-way concat per
     column (``Table.concat_all``) instead of the O(P²) pairwise chain.
 
@@ -168,7 +187,9 @@ def _read_side(ctx, stage: str, parts, window: int = PREFETCH_WINDOW):
     ``window`` partitions are prefetched up front and partition ``i+window``
     starts fetching before partition ``i`` is consumed — per-partition read
     *order* (and therefore the store's fault-hook match counts per stage)
-    is exactly the barrier path's.
+    is exactly the barrier path's. A writer-restricted read (``writers``)
+    skips the prefetch cache entirely: prefetched handles hold full
+    partitions, not this invocation's shard.
     """
     if parts == "all":
         return ctx.get_all(stage)
@@ -176,7 +197,8 @@ def _read_side(ctx, stage: str, parts, window: int = PREFETCH_WINDOW):
     # a single-partition side has nothing to double-buffer: a prefetch
     # thread would only add a spawn + GIL handoff to a read we immediately
     # block on
-    pipelined = ctx.plan in ("pipelined", "fused") and len(parts) > 1
+    pipelined = ctx.plan in ("pipelined", "fused") and len(parts) > 1 \
+        and writers is None
     if pipelined:
         for part in parts[:window]:
             ctx.prefetch(stage, part)
@@ -184,10 +206,39 @@ def _read_side(ctx, stage: str, parts, window: int = PREFETCH_WINDOW):
     for i, part in enumerate(parts):
         if pipelined and i + window < len(parts):
             ctx.prefetch(stage, parts[i + window])
-        t = ctx.get(stage, part)
+        t = ctx.get(stage, part, writers=writers)
         if t is not None and t.num_rows:
             got.append(t)
     return Table.concat_all(got) if got else None
+
+
+def _mitigation_view(fact, p):
+    """Apply the skew plan's fact-side restrictions before joining.
+
+    ``row_lo``/``row_hi`` select one salted sub-range of a heavy bucket —
+    the range indexes the deterministic writer-ordered concatenation a
+    bucket read produces, so the planner's histogram-derived splits land on
+    exactly the rows it counted. ``drop_keys`` removes the heavy-hitter
+    keys a broadcast split routes elsewhere; ``keep_keys`` is the hot-probe
+    side of the same split. Absent params leave the fact side untouched,
+    so the unmitigated plan's execution is byte-identical to before."""
+    if fact is None or fact.num_rows == 0:
+        return fact
+    lo = p.get("row_lo")
+    if lo is not None:
+        lo, hi = int(lo), min(int(p["row_hi"]), fact.num_rows)
+        if hi <= lo:
+            return None
+        fact = fact.slice(lo, hi).materialize()
+    drop = p.get("drop_keys")
+    if drop:
+        keep = ~np.isin(np.asarray(fact["key"]), list(drop))
+        fact = fact.mask(jnp.asarray(keep))
+    keep_keys = p.get("keep_keys")
+    if keep_keys:
+        keep = np.isin(np.asarray(fact["key"]), list(keep_keys))
+        fact = fact.mask(jnp.asarray(keep))
+    return fact
 
 
 def _join_partition(ctx, method: str) -> None:
@@ -204,8 +255,10 @@ def _join_partition(ctx, method: str) -> None:
         if len(dim_parts) > 1:
             for part in dim_parts:
                 ctx.prefetch(p["dim_stage"], part)
-    fact = _read_side(ctx, p["fact_stage"], p["fact_partitions"])
+    fact = _read_side(ctx, p["fact_stage"], p["fact_partitions"],
+                      writers=p.get("fact_writers"))
     dim = _read_side(ctx, p["dim_stage"], p["dim_partitions"])
+    fact = _mitigation_view(fact, p)
     if fact is None or fact.num_rows == 0 or dim is None or dim.num_rows == 0:
         ctx.put(p["dst"], p["partition"], _empty_joined())
         return
@@ -239,6 +292,44 @@ def hash_join_partition(ctx) -> None:
 def merge_join_partition(ctx) -> None:
     """Shuffled sort-merge join over one co-partitioned bucket."""
     _join_partition(ctx, "merge")
+
+
+@register("salted_join_partition")
+def salted_join_partition(ctx) -> None:
+    """One writer shard of a heavy shuffled bucket: sort-merge join of the
+    ``fact_writers`` slices of the bucket against the bucket's dim side
+    (replicated across the bucket's sub-joins), writing straight into an
+    extra ``joined`` partition the aggregation folds like any other — no
+    single invocation ever reads (or joins) the whole heavy bucket."""
+    _join_partition(ctx, "merge")
+
+
+@register("hot_filter_write")
+def hot_filter_write(ctx) -> None:
+    """Broadcast split, build side: collect the heavy-hitter keys' dim rows
+    from the scan output and publish them as one replicated build partition
+    for the hot probes. Writes nothing when no dim row matches (the hot
+    joins then emit empty output — same result as an unmatched probe)."""
+    p = ctx.params
+    keys = [int(k) for k in p["keys"]]
+    got = []
+    for part in p["src_partitions"]:
+        t = ctx.get(p["src"], part)
+        if t is None or t.num_rows == 0:
+            continue
+        keep = np.isin(np.asarray(t["key"]), keys)
+        if keep.any():
+            got.append(t.mask(jnp.asarray(keep)))
+    if got:
+        ctx.put(p["dst"], 0, Table.concat_all(got))
+
+
+@register("hot_join_partition")
+def hot_join_partition(ctx) -> None:
+    """Broadcast split, probe side: hash-join one fact scan partition's
+    heavy-hitter rows (``keep_keys``) against the replicated hot build
+    side — per-writer parallelism replacing the one straggler bucket."""
+    _join_partition(ctx, "hash")
 
 
 @register("partial_aggregate")

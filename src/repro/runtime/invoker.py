@@ -117,6 +117,11 @@ class FnContext:
         self.store_seconds = 0.0
         self.rows_actual = 0
         self.rows_padded = 0
+        # free-form per-invocation observations a function body emits for
+        # profile_feedback (e.g. shuffle_write's per-bucket histogram and
+        # heavy-hitter sketch); values must be picklable — the process
+        # backend marshals them home with the worker metrics
+        self.stats: dict[str, Any] = {}
         self.reads_by_node: dict[int, int] = {}
         self.writes: list[tuple[str, int]] = []   # lineage: (stage, part)
         self._prefetched: dict[tuple[str, int], PrefetchHandle] = {}
@@ -169,9 +174,12 @@ class FnContext:
 
             self._prefetched[key] = PrefetchHandle(fetch)
 
-    def get(self, stage: str, partition: int):
+    def get(self, stage: str, partition: int, writers=None):
+        # a writer-restricted read never consults the prefetch cache: a
+        # prefetched handle holds the FULL partition, not the caller's shard
         with self._pf_lock:
-            handle = self._prefetched.pop((stage, int(partition)), None)
+            handle = None if writers is not None else \
+                self._prefetched.pop((stage, int(partition)), None)
         if handle is not None:
             t0 = time.perf_counter()
             try:
@@ -186,11 +194,13 @@ class FnContext:
                 self.bytes_in += int(t.nbytes)
             return t
         for src, b in self._store.read_sources(
-                self.app, stage, partition, self.node).items():
+                self.app, stage, partition, self.node,
+                writers=writers).items():
             self.reads_by_node[src] = self.reads_by_node.get(src, 0) + b
         t0 = time.perf_counter()
         try:
-            t = self._store.get(self.app, stage, partition, self.node)
+            t = self._store.get(self.app, stage, partition, self.node,
+                                writers=writers)
         finally:
             self.store_seconds += time.perf_counter() - t0
         if t is not None:
@@ -509,7 +519,8 @@ class Invoker:
                 store_seconds=ctx.store_seconds,
                 reads_by_node=dict(ctx.reads_by_node), deps=deps,
                 priority=inv.priority, writes=tuple(ctx.writes),
-                rows_actual=ctx.rows_actual, rows_padded=ctx.rows_padded))
+                rows_actual=ctx.rows_actual, rows_padded=ctx.rows_padded,
+                stats=dict(ctx.stats)))
             if sp is not None:
                 sp.attrs.update(status=status, attempts=attempt + 1)
                 tr.record(f"attempt/{attempt}", "invoker", t0, end=t1,
@@ -544,7 +555,8 @@ class Invoker:
             deps=deps, priority=inv.priority,
             writes=tuple(ctx.writes) if ctx else (),
             rows_actual=ctx.rows_actual if ctx else 0,
-            rows_padded=ctx.rows_padded if ctx else 0))
+            rows_padded=ctx.rows_padded if ctx else 0,
+            stats=dict(ctx.stats) if ctx else {}))
 
     def _execute_batch(self, invs: list[Invocation],
                        deps: tuple[str, ...]) -> None:

@@ -60,7 +60,13 @@ def _inputs(inv: "Invocation") -> list[tuple[str, list[int] | None]]:
     p = inv.params
     out: list[tuple[str, list[int] | None]] = []
     if "src" in p:
-        out.append((p["src"], [p["partition"]] if "partition" in p else None))
+        if "src_partitions" in p:
+            # multi-partition readers (hot_filter_write):
+            # "partition" is their *destination*, not a read
+            out.append((p["src"], list(p["src_partitions"])))
+        else:
+            out.append((p["src"],
+                        [p["partition"]] if "partition" in p else None))
     if "fact_stage" in p:
         fp = p.get("fact_partitions")
         out.append((p["fact_stage"], None if fp == "all" else list(fp)))

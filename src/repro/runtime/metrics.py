@@ -14,6 +14,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Mapping
 
+from repro.core.decisions import merge_hot_keys, partition_skew
+
 
 @dataclass
 class InvocationRecord:
@@ -45,6 +47,10 @@ class InvocationRecord:
     # added (surfaced as ``padding_overhead`` in profile feedback)
     rows_actual: int = 0
     rows_padded: int = 0
+    # free-form per-invocation observations the function body emitted via
+    # ``ctx.stats`` (e.g. shuffle_write's per-bucket histogram and
+    # heavy-hitter sketch — the skew node's observed distribution)
+    stats: Mapping = field(default_factory=dict)
 
     @property
     def seconds(self) -> float:
@@ -70,6 +76,12 @@ class StageMetrics:
     bytes_out: int = 0
     rows_actual: int = 0
     rows_padded: int = 0
+    # per-bucket histograms summed elementwise over the stage's writers
+    # (first ok record per invocation name — retries and speculation
+    # duplicates never double-count), plus their heavy-hitter sketches
+    partition_rows: tuple = ()
+    partition_bytes: tuple = ()
+    hot_sketches: tuple = ()
 
     @property
     def padding_overhead(self) -> float:
@@ -78,6 +90,43 @@ class StageMetrics:
         if self.rows_padded <= self.rows_actual:
             return 0.0
         return (self.rows_padded - self.rows_actual) / self.rows_padded
+
+    @property
+    def max_partition_bytes(self) -> int:
+        return max(self.partition_bytes, default=0)
+
+    @property
+    def mean_partition_bytes(self) -> float:
+        if not self.partition_bytes:
+            return 0.0
+        return sum(self.partition_bytes) / len(self.partition_bytes)
+
+    @property
+    def partition_skew(self) -> float:
+        """max/mean per-bucket rows — the lopsidedness figure the skew
+        decision node thresholds on."""
+        return partition_skew(self.partition_rows)
+
+    @property
+    def hot_keys(self) -> tuple:
+        """Merged top-k heavy hitters across the stage's writers."""
+        return merge_hot_keys(self.hot_sketches)
+
+
+def _tuple_add(a: tuple, b) -> tuple:
+    """Elementwise sum of two int tuples, right-padding the shorter with
+    zeros (writers all emit ``num_buckets`` entries, but a stage mixing
+    histogram and non-histogram records must still merge cleanly)."""
+    a, b = tuple(a), tuple(b)
+    if not b:
+        return a
+    if not a:
+        return tuple(int(x) for x in b)
+    if len(a) < len(b):
+        a = a + (0,) * (len(b) - len(a))
+    elif len(b) < len(a):
+        b = b + (0,) * (len(a) - len(b))
+    return tuple(int(x) + int(y) for x, y in zip(a, b))
 
 
 class MetricsSink:
@@ -126,6 +175,7 @@ class MetricsSink:
 
     def by_stage(self, app: str | None = None) -> dict[str, StageMetrics]:
         out: dict[str, StageMetrics] = {}
+        stat_seen: dict[str, set[str]] = {}
         with self._lock:
             records = list(self.records)
         for r in records:
@@ -145,6 +195,21 @@ class MetricsSink:
             m.bytes_out += r.bytes_out
             m.rows_actual += r.rows_actual
             m.rows_padded += r.rows_padded
+            if r.status == "ok" and r.stats:
+                # only the first committed record per invocation name feeds
+                # the stage histograms: a retried or speculated writer
+                # recomputes the identical stats, and summing them twice
+                # would fake skew the data doesn't have
+                seen = stat_seen.setdefault(r.stage, set())
+                if r.name not in seen:
+                    seen.add(r.name)
+                    m.partition_rows = _tuple_add(
+                        m.partition_rows, r.stats.get("partition_rows", ()))
+                    m.partition_bytes = _tuple_add(
+                        m.partition_bytes, r.stats.get("partition_bytes", ()))
+                    hot = tuple(r.stats.get("hot_keys", ()))
+                    if hot:
+                        m.hot_sketches = m.hot_sketches + (hot,)
         return out
 
     def stage_spans(self, app: str | None = None,
@@ -182,6 +247,13 @@ class MetricsSink:
             out[f"{name}.starved"] = m.starved
             out[f"{name}.error"] = m.error
             out[f"{name}.padding_overhead"] = m.padding_overhead
+            if m.partition_rows:
+                out[f"{name}.partition_rows"] = m.partition_rows
+                out[f"{name}.partition_bytes"] = m.partition_bytes
+                out[f"{name}.partition_skew"] = m.partition_skew
+                out[f"{name}.max_partition_bytes"] = m.max_partition_bytes
+                out[f"{name}.mean_partition_bytes"] = m.mean_partition_bytes
+                out[f"{name}.hot_keys"] = m.hot_keys
         return out
 
     def format_table(self, app: str) -> str:
@@ -194,18 +266,21 @@ class MetricsSink:
         lines = [f"{'stage':16s} {'inv':>4s} {'pre':>4s} {'stv':>4s} "
                  f"{'err':>4s} {'seconds':>9s} "
                  f"{'store_s':>9s} {'bytes_in':>10s} {'bytes_out':>10s} "
-                 f"{'pad%':>5s}"]
+                 f"{'pad%':>5s} {'skew':>5s} {'hot':>4s}"]
         stages = self.by_stage(app)
         spans = self.stage_spans(app)
         total = StageMetrics()
         for name in sorted(stages,
                            key=lambda s: spans.get(s, (float("inf"), 0))[0]):
             m = stages[name]
+            skew = f"{m.partition_skew:5.1f}" if m.partition_rows \
+                else f"{'-':>5s}"
             lines.append(f"{name:16s} {m.invocations:4d} {m.preempted:4d} "
                          f"{m.starved:4d} {m.error:4d} "
                          f"{m.seconds:9.4f} {m.store_seconds:9.4f} "
                          f"{m.bytes_in:10d} {m.bytes_out:10d} "
-                         f"{100 * m.padding_overhead:5.1f}")
+                         f"{100 * m.padding_overhead:5.1f} "
+                         f"{skew} {len(m.hot_keys):4d}")
             total.invocations += m.invocations
             total.preempted += m.preempted
             total.starved += m.starved
@@ -216,12 +291,20 @@ class MetricsSink:
             total.bytes_out += m.bytes_out
             total.rows_actual += m.rows_actual
             total.rows_padded += m.rows_padded
+            total.partition_rows = _tuple_add(total.partition_rows,
+                                              m.partition_rows)
+            total.partition_bytes = _tuple_add(total.partition_bytes,
+                                               m.partition_bytes)
+            total.hot_sketches = total.hot_sketches + m.hot_sketches
         m = total
+        skew = f"{m.partition_skew:5.1f}" if m.partition_rows \
+            else f"{'-':>5s}"
         lines.append(f"{'TOTAL':16s} {m.invocations:4d} {m.preempted:4d} "
                      f"{m.starved:4d} {m.error:4d} "
                      f"{m.seconds:9.4f} {m.store_seconds:9.4f} "
                      f"{m.bytes_in:10d} {m.bytes_out:10d} "
-                     f"{100 * m.padding_overhead:5.1f}")
+                     f"{100 * m.padding_overhead:5.1f} "
+                     f"{skew} {len(m.hot_keys):4d}")
         return "\n".join(lines)
 
     # -- trace replay into the simulator ---------------------------------------

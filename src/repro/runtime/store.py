@@ -177,10 +177,14 @@ class ShuffleStore:
         # pressure reclaims it (insertion order == LRU eviction order)
         self._sealed: dict[tuple[str, str], bool] = {}
         self.evictions: list[tuple[str, str, int]] = []
-        # lost tombstones: (app, stage) -> partition ids whose written data
-        # was evicted/killed; reads raise StageLostError until a producer
-        # rewrites the partition (or recovery clears the marker)
-        self._lost: dict[tuple[str, str], set[int]] = {}
+        # lost tombstones: (app, stage) -> {partition id: writer labels
+        # still owed}. The owed set is snapshotted at loss time so a
+        # partition only heals once EVERY writer that had contributed a
+        # slice has re-written it — healing on the first re-write would let
+        # a concurrent reader see a partial (subset-of-writers) concat
+        # mid-recovery. Reads raise StageLostError until the partition
+        # heals or recovery clears the marker.
+        self._lost: dict[tuple[str, str], dict[int, set[str]]] = {}
         # fault-injection hook: consulted at the top of every ``get`` so a
         # FaultPlan can lose a stage deterministically on its k-th read
         self.injector = None
@@ -366,12 +370,17 @@ class ShuffleStore:
         to the primary. Returns emulated backend seconds to pay outside
         the lock."""
         lost = self._lost.get((app, stage))
-        if lost is not None:
+        if lost is not None and partition in lost:
             # a producer (retry, speculation backup, lineage recompute)
-            # rewriting a lost partition heals it
-            lost.discard(partition)
-            if not lost:
-                del self._lost[(app, stage)]
+            # rewriting a lost partition heals it — but only once every
+            # writer whose slice was lost has re-written, else a reader
+            # racing the recovery sees a partial concat
+            owed = lost[partition]
+            owed.discard(writer)
+            if not owed:
+                del lost[partition]
+                if not lost:
+                    del self._lost[(app, stage)]
         parts = self._stages.setdefault((app, stage), {})
         blobs = parts.setdefault(partition, {})
         old = blobs.get(writer)
@@ -514,22 +523,26 @@ class ShuffleStore:
     # -- reads ----------------------------------------------------------------
 
     def get(self, app: str, stage: str, partition: int, node: int,
-            account: bool = True):
+            account: bool = True, writers: Sequence[str] | None = None):
         """Concatenate every writer's slice of a partition (writer-sorted, so
         content is deterministic under concurrent invokers). Remote reads are
         charged to the blob's home node — this is the shuffle/broadcast
         traffic the simulator's NIC model prices. Demoted slices read
         through their backend (emulated latency/bandwidth outside the lock,
         dollar cost billed) and transparently promote back into memory when
-        quota headroom allows. Returns None if absent; raises
+        quota headroom allows. ``writers`` restricts the read to that subset
+        of writer labels (the skew node's writer-sharded sub-joins each pull
+        only their share of a heavy bucket); only the fetched slices are
+        accounted and charged. Returns None if absent; raises
         ``StageLostError`` if the partition was written and then
         evicted/killed (the reader must never see silently-missing data)."""
         tr = get_tracer()
         if not tr.enabled:
-            return self._get_impl(app, stage, partition, node, account)
+            return self._get_impl(app, stage, partition, node, account,
+                                  writers)
         t0 = time.perf_counter()
         try:
-            t = self._get_impl(app, stage, partition, node, account)
+            t = self._get_impl(app, stage, partition, node, account, writers)
         except StageLostError:
             tr.record(f"get/{stage}", "store", t0, trace=app, node=node,
                       partition=partition, status="lost")
@@ -541,15 +554,17 @@ class ShuffleStore:
         return t
 
     def get_async(self, app: str, stage: str, partition: int, node: int,
-                  account: bool = True) -> PrefetchHandle:
+                  account: bool = True,
+                  writers: Sequence[str] | None = None) -> PrefetchHandle:
         """``get`` on a background thread — the double-buffered read used by
         the pipelined data plane (fetch bucket k+1 while probing bucket k).
         Accounting and fault hooks run in the worker, once."""
         return PrefetchHandle(
-            lambda: self.get(app, stage, partition, node, account))
+            lambda: self.get(app, stage, partition, node, account, writers))
 
     def _get_impl(self, app: str, stage: str, partition: int, node: int,
-                  account: bool = True):
+                  account: bool = True,
+                  writers: Sequence[str] | None = None):
         remote = 0
         hot_tier = self._hot.tier
         with self._lock:
@@ -557,16 +572,24 @@ class ShuffleStore:
                 # fault-injection: a plan may lose this stage right now (the
                 # k-th read) — the lost check below then raises
                 self.injector.on_get(app, stage, partition, node)
+            # the tombstone check must come *before* the presence check: a
+            # recovering partition repopulates writer-by-writer, so blobs can
+            # be non-empty (a partial subset) while still owed — reading it
+            # would concat a subset of the writers' slices
+            lost = self._lost.get((app, stage))
+            if lost and partition in lost:
+                raise StageLostError(app, stage, (partition,))
             blobs = self._stages.get((app, stage), {}).get(partition)
             if not blobs:
-                lost = self._lost.get((app, stage))
-                if lost and partition in lost:
-                    raise StageLostError(app, stage, (partition,))
+                return None
+            names = sorted(blobs) if writers is None else \
+                [w for w in sorted(blobs) if w in writers]
+            if not names:
                 return None
             # snapshot under the lock; backend fetches happen outside it
             snap = [(w, blobs[w], blobs[w].table, blobs[w].tier,
                      blobs[w].key, blobs[w].nbytes, blobs[w].node)
-                    for w in sorted(blobs)]
+                    for w in names]
             if account:
                 for _, _, _, tier, _, nb, home in snap:
                     self.read_bytes[node] = \
@@ -660,7 +683,7 @@ class ShuffleStore:
         raises instead of silently skipping evicted data."""
         with self._lock:
             return sorted(set(self._stages.get((app, stage), {})) |
-                          self._lost.get((app, stage), set()))
+                          set(self._lost.get((app, stage), set())))
 
     def partition_state(self, app: str, stage: str,
                         ) -> tuple[set[int], set[int]]:
@@ -680,15 +703,19 @@ class ShuffleStore:
                        for b in part.values())
 
     def read_sources(self, app: str, stage: str, partition: int,
-                     reader: int) -> dict[int, int]:
+                     reader: int,
+                     writers: Sequence[str] | None = None) -> dict[int, int]:
         """Bytes this partition would pull per remote source node (for trace
         replay into the simulator's transfer model). Demoted blobs are
         excluded — their reads are backend traffic, not node-to-node
-        transfers. Does not account."""
+        transfers. ``writers`` restricts to that subset of writer labels,
+        mirroring a writer-sharded ``get``. Does not account."""
         with self._lock:
             blobs = self._stages.get((app, stage), {}).get(partition, {})
             out: dict[int, int] = {}
-            for b in blobs.values():
+            for w, b in blobs.items():
+                if writers is not None and w not in writers:
+                    continue
                 if b.tier != self._hot.tier or b.node == reader:
                     continue
                 out[b.node] = out.get(b.node, 0) + b.nbytes
@@ -833,14 +860,17 @@ class ShuffleStore:
                 return 0
             targets = sorted(parts) if partitions is None else \
                 [p for p in partitions if p in parts]
-            lost = self._lost.setdefault(key, set())
+            lost = self._lost.setdefault(key, {})
             hot_freed = cold_freed = 0
             for p in targets:
-                for b in parts.pop(p).values():
+                blobs = parts.pop(p)
+                for b in blobs.values():
                     h, c = self._retract_locked(app, b)
                     hot_freed += h
                     cold_freed += c
-                lost.add(p)
+                # remember which writers' slices vanished: the partition
+                # only heals once all of them have re-written
+                lost.setdefault(p, set()).update(blobs)
             if not lost:
                 del self._lost[key]
             if not parts:
@@ -866,7 +896,8 @@ class ShuffleStore:
             if partitions is None:
                 del self._lost[key]
                 return
-            lost.difference_update(partitions)
+            for p in partitions:
+                lost.pop(p, None)
             if not lost:
                 del self._lost[key]
 

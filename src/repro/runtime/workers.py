@@ -105,6 +105,7 @@ class _WorkerSideContext:
         self.writes: list = []           # buffered, committed host-side
         self.rows_actual = 0
         self.rows_padded = 0
+        self.stats: dict = {}            # marshaled home with the metrics
 
     @property
     def plan(self) -> str:
@@ -125,8 +126,9 @@ class _WorkerSideContext:
             raise _TaskAborted(reply[1])
         return reply[1]
 
-    def get(self, stage: str, partition: int):
-        cols = self._rpc("get", str(stage), int(partition))
+    def get(self, stage: str, partition: int, writers=None):
+        cols = self._rpc("get", str(stage), int(partition),
+                         None if writers is None else tuple(writers))
         return None if cols is None else deserialize_table(cols)
 
     def get_all(self, stage: str):
@@ -214,6 +216,7 @@ def _worker_metrics(ctx, t0: float, pad0, pad1) -> dict:
             "rpc_s": ctx.rpc_seconds,
             "rows_actual": pad1[0] - pad0[0],
             "rows_padded": pad1[1] - pad0[1],
+            "stats": dict(ctx.stats),
             "pid": os.getpid()}
 
 
@@ -571,6 +574,7 @@ class ProcessPoolInvoker(ThreadPoolInvoker):
                 self.pool.retire(worker, busy)
         ctx.rows_actual = int(metrics.get("rows_actual", 0))
         ctx.rows_padded = int(metrics.get("rows_padded", 0))
+        ctx.stats = dict(metrics.get("stats") or {})
         if tr.enabled:
             # merge the worker's own timing into the host trace: a child
             # span of the invocation bracketing the remote body, with the
@@ -594,7 +598,7 @@ class ProcessPoolInvoker(ThreadPoolInvoker):
             kind = msg[0]
             if kind == "get":
                 try:
-                    t = ctx.get(msg[1], msg[2])
+                    t = ctx.get(msg[1], msg[2], writers=msg[3])
                 except StageLostError as e:
                     # abort the remote body and surface the typed error
                     # from the host (tombstones must reach lineage

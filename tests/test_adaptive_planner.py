@@ -175,7 +175,7 @@ def test_join_node_flips_on_observed_post_filter_distribution():
     np.testing.assert_allclose(got, ref, atol=1e-3)
     # the decision sequence shows the full per-phase workflow
     assert [name for name, _ in run.sequence] == \
-        ["scan", "join", "exchange", "aggregate", "pipeline",
+        ["scan", "join", "exchange", "skew", "aggregate", "pipeline",
              "elastic", "tiering"]
     assert run.decisions["exchange"].func == "shuffle"
 

@@ -213,7 +213,7 @@ def test_scheduler_fair_share_runs_concurrently_and_correctly():
     assert runtime.invoker.gate is None
     assert sum(gc.used.values()) == 0
     # per-query decision sequences were captured
-    assert all(len(r.decisions) == 7 for r in results.values())
+    assert all(len(r.decisions) == 8 for r in results.values())
 
 
 def test_scheduler_fair_share_respects_store_quotas():

@@ -390,7 +390,7 @@ def test_tiering_decision_parity_across_planes(tables):
                for s, d in wf.last_run.sequence]
 
     assert [s for s, *_ in seq_rt] == ["scan", "join", "exchange",
-                                       "aggregate", "pipeline", "elastic",
-                                       "tiering"]
+                                       "skew", "aggregate", "pipeline",
+                                       "elastic", "tiering"]
     assert seq_rt == seq_sim           # per-stage spill plans included
     assert dict((s, f) for s, f, _, _ in seq_rt)["tiering"] == "spill"

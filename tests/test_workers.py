@@ -119,7 +119,7 @@ def test_process_backend_query_matches_oracle_with_elastic_decision():
         np.testing.assert_allclose(res.sums, ref, atol=1e-3)
         # the sixth decision node bound on the runtime plane, last
         assert [n for n, _ in res.decisions] == \
-            ["scan", "join", "exchange", "aggregate", "pipeline",
+            ["scan", "join", "exchange", "skew", "aggregate", "pipeline",
              "elastic", "tiering"]
         elastic = dict(res.decisions)["elastic"]
         assert elastic.func in ("grow", "shrink", "hold")
